@@ -1,0 +1,59 @@
+"""Paper Fig. 3: asynchronous AMA under transmission delay.
+
+Moderate (p_delay=0.3) and severe (0.7) environments, max delay
+{5, 10, 15} rounds; the paper's claim: under moderate delay the accuracy
+degradation up to 15 rounds of staleness is < 1%.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.configs.registry import ARCHS
+from repro.core.simulation import FederatedSimulation
+from repro.data.partition import shard_partition
+from repro.data.pipeline import build_clients
+from repro.data.synth import make_image_classification
+from repro.models.api import build_model
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def run(rounds=60, quick=False):
+    model = build_model(ARCHS["paper-cnn"])
+    train, test = make_image_classification(n_train=1500, n_test=400, seed=0)
+    clients = build_clients(train, shard_partition(train["label"], 20, seed=0))
+    results = []
+    grids = [("none", 0.0, 0)]
+    delays = [5, 15] if quick else [5, 10, 15]
+    envs = [("moderate", 0.3)] if quick else [("moderate", 0.3),
+                                              ("severe", 0.7)]
+    for env, pd in envs:
+        for md in delays:
+            grids.append((env, pd, md))
+    if quick:
+        rounds = 25
+    for env, pd, md in grids:
+        fl = FLConfig(num_clients=20, clients_per_round=5, local_epochs=2,
+                      local_batch_size=25, lr=0.1, p_limited=0.25,
+                      algorithm="ama_fes", p_delay=pd, max_delay=md, seed=0)
+        sim = FederatedSimulation(model, fl, clients, test)
+        hist = sim.run(rounds=rounds)
+        last = max(10, rounds // 4)
+        rec = {"env": env, "p_delay": pd, "max_delay": md,
+               "accuracy": float(np.mean(hist.test_acc[-last:])),
+               "stability_var": hist.stability_variance(last)}
+        results.append(rec)
+        print(f"fig3,{env},md={md},acc={rec['accuracy']:.4f},"
+              f"var={rec['stability_var']:.2f}")
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "fig3_async.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    run()

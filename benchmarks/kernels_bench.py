@@ -1,0 +1,81 @@
+"""Kernel microbenchmarks: interpret-mode correctness + CPU timing of the
+jnp reference (the TPU timing story lives in the roofline; these numbers
+prove the kernels run and give a per-call CSV)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.ama_mix import ama_mix_flat
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(quick=False):
+    rows = []
+    rng = np.random.RandomState(0)
+
+    # ama_mix: server aggregation of K=10 clients over 4M params
+    N, K = (1 << 20 if quick else 1 << 22), 10
+    prev = jnp.asarray(rng.randn(N), jnp.float32)
+    stacked = jnp.asarray(rng.randn(K, N), jnp.float32)
+    alpha = jnp.float32(0.3)
+    w = jnp.asarray(rng.rand(K), jnp.float32)
+    ref_fn = jax.jit(lambda p, s, a, ww: ref.ama_mix_ref(p, s, a, ww))
+    us = _time(ref_fn, prev, stacked, alpha, w)
+    bw = (K + 2) * N * 4 / (us * 1e-6) / 1e9
+    rows.append(("ama_mix_ref_cpu", us, f"{bw:.1f}GB/s_eff"))
+    got = ama_mix_flat(prev[:65536], stacked[:, :65536], alpha, w,
+                       interpret=True)
+    want = ref.ama_mix_ref(prev[:65536], stacked[:, :65536], alpha, w)
+    err = float(jnp.max(jnp.abs(got - want)))
+    rows.append(("ama_mix_pallas_interpret_maxerr", err, "allclose"))
+
+    # flash attention
+    B, S, H, hd = 1, (256 if quick else 512), 4, 64
+    q = jnp.asarray(rng.randn(B, S, H, hd), jnp.float32) * 0.3
+    k = jnp.asarray(rng.randn(B, S, H, hd), jnp.float32) * 0.3
+    v = jnp.asarray(rng.randn(B, S, H, hd), jnp.float32)
+    ref_attn = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us = _time(ref_attn, q, k, v)
+    rows.append((f"attention_ref_cpu_S{S}", us, ""))
+    got = flash_attention(q, k, v, interpret=True)
+    err = float(jnp.max(jnp.abs(got - ref_attn(q, k, v))))
+    rows.append(("flash_attention_interpret_maxerr", err, "allclose"))
+
+    # rwkv6 scan
+    B, S, H, hd = 2, (128 if quick else 512), 4, 64
+    r = jnp.asarray(rng.randn(B, S, H, hd), jnp.float32) * 0.5
+    kk = jnp.asarray(rng.randn(B, S, H, hd), jnp.float32) * 0.5
+    vv = jnp.asarray(rng.randn(B, S, H, hd), jnp.float32)
+    ww = jnp.asarray(rng.rand(B, S, H, hd) * 0.5 + 0.4, jnp.float32)
+    u = jnp.asarray(rng.randn(H, hd) * 0.1, jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    ref_scan = jax.jit(lambda *a: ref.rwkv6_scan_ref(*a))
+    us = _time(lambda *a: ref_scan(*a)[0], r, kk, vv, ww, u, s0)
+    rows.append((f"rwkv6_scan_ref_cpu_S{S}", us, ""))
+    y, _ = rwkv6_scan(r, kk, vv, ww, u, s0, chunk=128, interpret=True)
+    y2, _ = ref_scan(r, kk, vv, ww, u, s0)
+    err = float(jnp.max(jnp.abs(y - y2)))
+    rows.append(("rwkv6_scan_interpret_maxerr", err, "allclose"))
+
+    for name, val, extra in rows:
+        print(f"kernel,{name},{val},{extra}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

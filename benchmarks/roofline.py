@@ -1,0 +1,93 @@
+"""Roofline table: every (arch x shape) baseline on the single-pod mesh.
+
+Combines the deploy dry-run artifacts (memory, true to the runnable
+program) with the calibrated costing (FLOPs/bytes/collectives with scan
+trip counts restored). Writes experiments/roofline.json + a markdown
+table for EXPERIMENTS.md §Roofline.
+
+Term conventions (documented in EXPERIMENTS.md):
+  * all terms are per-device seconds: the optimized HLO is the
+    per-partition module, so cost_analysis numbers are per chip.
+  * memory_s uses HloCostAnalysis "bytes accessed", which assumes no
+    fusion/reuse — a structural UPPER BOUND on HBM traffic.
+  * collective_s sums result bytes of collective ops / 50 GB/s link.
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import json
+import time
+
+from repro.configs.registry import pairs
+
+from benchmarks import costing
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def one_pair(arch, shape_name):
+    t0 = time.time()
+    c = costing.calibrated_cost(arch, shape_name)
+    terms = costing.roofline_terms(c)
+    mf = costing.model_flops(arch, shape_name)
+    hlo_total = c["flops"] * 256
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "flops_per_dev": c["flops"], "bytes_per_dev": c["bytes"],
+        "coll_bytes_per_dev": c["coll"],
+        "recurrence_flops_per_dev": c.get("recurrence_flops", 0.0),
+        **terms,
+        "dominant": costing.dominant(terms),
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "wall_s": round(time.time() - t0, 1),
+    }
+    return rec
+
+
+def main(select=None):
+    out = []
+    for arch, shape_name, skip in pairs():
+        if skip:
+            out.append({"arch": arch, "shape": shape_name, "skip": True})
+            continue
+        if select and (arch, shape_name) not in select:
+            continue
+        try:
+            rec = one_pair(arch, shape_name)
+            print(f"{arch:24s} {shape_name:12s} dom={rec['dominant']:10s} "
+                  f"c/m/x = {rec['compute_s']:8.3f} {rec['memory_s']:8.3f} "
+                  f"{rec['collective_s']:8.3f} s  useful={rec['useful_ratio']:.2f}")
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape_name,
+                   "error": f"{type(e).__name__}: {e}"}
+            print(f"{arch:24s} {shape_name:12s} ERROR {rec['error'][:150]}")
+        out.append(rec)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "roofline.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+    # markdown table
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | useful (6ND/HLO) |",
+             "|---|---|---|---|---|---|---|"]
+    for r in out:
+        if r.get("skip"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped (see DESIGN.md) | — |")
+        elif "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | |")
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+                f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+                f"{r['dominant']} | {r['useful_ratio']:.2f} |")
+    with open(os.path.join(OUT_DIR, "roofline.md"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"\nwrote {len(out)} records")
+
+
+if __name__ == "__main__":
+    main()

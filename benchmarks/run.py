@@ -1,0 +1,41 @@
+"""Benchmark entrypoint: one function per paper table/figure + kernels.
+
+``python -m benchmarks.run``          — quick mode (CI-sized)
+``python -m benchmarks.run --full``   — paper-scale miniatures (slower)
+
+The roofline sweep (40 pairs, heavy compiles) is separate:
+``python benchmarks/roofline.py``.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    quick = not full
+    print("name,value,derived")
+
+    print("# --- Fig.2: sync AMA-FES vs naive FL vs FedProx ---")
+    from benchmarks import fig2_sync
+    fig2_sync.run(quick=quick)
+
+    print("# --- Fig.3: async AMA delay tolerance ---")
+    from benchmarks import fig3_async
+    fig3_async.run(quick=quick)
+
+    print("# --- kernels ---")
+    from benchmarks import kernels_bench
+    kernels_bench.run(quick=quick)
+
+    if full:
+        print("# --- ablation: adaptive vs fixed alpha ---")
+        from benchmarks import ablation_alpha
+        ablation_alpha.run()
+
+    print("# done. roofline: experiments/roofline.md "
+          "(python benchmarks/roofline.py)")
+
+
+if __name__ == "__main__":
+    main()

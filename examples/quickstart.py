@@ -1,0 +1,42 @@
+"""Quickstart: the paper's experiment end-to-end in ~40 lines.
+
+Trains the paper's 2-conv/3-FC CNN federatedly over 20 non-iid clients
+(2-class shards) with AMA aggregation + FES computation reduction, then
+compares against naive FedAvg. Runs in ~1 min on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.configs.registry import ARCHS
+from repro.core.simulation import FederatedSimulation
+from repro.data.partition import shard_partition
+from repro.data.pipeline import build_clients
+from repro.data.synth import make_image_classification
+from repro.models.api import build_model
+
+
+def main():
+    # 1. data: synthetic MNIST-shaped classification, pathological non-iid
+    train, test = make_image_classification(n_train=1500, n_test=400, seed=0)
+    partition = shard_partition(train["label"], num_clients=20, seed=0)
+    clients = build_clients(train, partition)
+
+    # 2. model: the paper's CNN (Section V)
+    model = build_model(ARCHS["paper-cnn"])
+
+    # 3. federated training: AMA-FES vs naive FL
+    for algo in ("ama_fes", "fedavg"):
+        fl = FLConfig(num_clients=20, clients_per_round=5, local_epochs=2,
+                      local_batch_size=25, lr=0.1, p_limited=0.5,
+                      algorithm=algo, seed=0)
+        sim = FederatedSimulation(model, fl, clients, test)
+        hist = sim.run(rounds=60)
+        print(f"{algo:8s}: accuracy={np.mean(hist.test_acc[-5:]):.3f}  "
+              f"stability_var={hist.stability_variance(20):.2f}  "
+              f"(lower var = more stable)")
+
+
+if __name__ == "__main__":
+    main()

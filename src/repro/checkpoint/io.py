@@ -1,0 +1,46 @@
+"""Checkpointing: flat-key npz save/restore for param/opt/queue pytrees."""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        arr = np.asarray(tree)
+        if arr.dtype.kind == "V":      # bfloat16 etc: store lossless as f32
+            arr = np.asarray(tree, dtype=np.float32)
+        out[prefix[:-1]] = arr
+    return out
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (dtypes preserved from disk)."""
+    with np.load(path) as zf:
+        flat = dict(zf)
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            vals = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+            return type(tree)(vals)
+        leaf = flat[prefix[:-1]]
+        return jax.numpy.asarray(leaf).astype(tree.dtype) \
+            if hasattr(tree, "dtype") else jax.numpy.asarray(leaf)
+
+    return rebuild(like)

@@ -1,0 +1,159 @@
+"""Config dataclasses for models, input shapes and federated runs."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description. One instance per ``configs/<arch>.py``."""
+
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio | cnn
+    num_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    num_heads: int = 0          # 0 for attention-free families
+    num_kv_heads: int = 0
+    head_dim: int = 0           # 0 -> d_model // num_heads
+    # --- MoE ---
+    num_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    moe_group_size: int = 0     # >0: blocked dispatch over token groups —
+                                # one-hot dispatch FLOPs become linear in T
+                                # instead of quadratic (see EXPERIMENTS §Perf)
+    # --- attention details ---
+    sliding_window: int = 0     # 0 = full attention
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    mlp_gated: bool = True      # SwiGLU vs plain GELU MLP
+    # --- SSM / linear attention ---
+    ssm_state: int = 0          # mamba2 state size
+    conv_width: int = 4
+    # --- hybrid (zamba2-style) ---
+    attn_every: int = 0         # insert a (shared) attention block every N blocks
+    shared_attn: bool = False   # one shared attention param set (Zamba2)
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0        # precomputed frame embeddings length
+    # --- VLM ---
+    num_patches: int = 0        # precomputed patch embeddings length
+    vision_dim: int = 0         # stub frontend output dim (projected to d_model)
+    # --- numerics / sharding ---
+    dtype: str = "bfloat16"
+    train_fsdp: bool = False    # shard params over the dsub axis during training
+    serve_2d: bool = False      # 2-D tensor parallel at serving time (very large)
+    remat: bool = True
+    unroll_chunks: bool = False # unroll attention KV-chunk loop (dry-run: makes
+                                # cost_analysis see every chunk; scans are
+                                # otherwise costed once by HloCostAnalysis)
+    unroll_layers: bool = False # unroll the layer scan (roofline calibration
+                                # lowerings at reduced depth)
+    shard_residuals: bool = False  # store the per-layer activation
+                                # checkpoints model-sharded (d on "model"):
+                                # 16x smaller residual stack for one extra
+                                # all-gather per layer in backward (§Perf H3)
+    attn_chunk: int = 512       # KV chunk for online-softmax attention
+    # --- FES split (paper Eq. 2): classifier = final norm + head + tail blocks
+    fes_tail_layers: int = 2
+    # --- provenance ---
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input shape."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    """Federated-learning runtime config (paper Table I defaults)."""
+
+    num_clients: int = 50          # K
+    clients_per_round: int = 10    # m
+    rounds: int = 200              # B
+    local_epochs: int = 10         # e
+    local_batch_size: int = 32
+    lr: float = 0.001              # epsilon
+    # AMA (paper: alpha0=0.1, eta=2.5e-3, b=0.6)
+    alpha0: float = 0.1
+    eta: float = 2.5e-3
+    staleness_b: float = 0.6
+    alpha_cap: float = 0.95        # keep beta > 0 for long runs
+    # heterogeneity simulation
+    p_limited: float = 0.25        # ratio of computing-limited devices
+    p_delay: float = 0.0           # prob. of transmission delay (0.3 / 0.7)
+    max_delay: int = 0             # 5 / 10 / 15 rounds; 0 disables async path
+    # baselines: "ama_fes" | "fedavg" | "fedprox"
+    algorithm: str = "ama_fes"
+    fedprox_rho: float = 0.01
+    fedprox_partial: float = 0.5   # fraction of local steps on limited devices
+    fes_static: bool = False       # ALL cohorts computing-limited: classifier-
+                                   # only differentiation (the body backward is
+                                   # never built — paper §III at pod scale)
+    fes_enabled: bool = True
+    seed: int = 0
+    # pod-scale runs: #parallel client cohorts simulated in one jitted round
+    cohorts: int = 4
+    local_steps: int = 1           # grad steps per cohort per round (pod-scale)
+
+
+def reduced(cfg: ModelConfig, **kw) -> ModelConfig:
+    """Reduced same-family variant for CPU smoke tests."""
+    small = dict(
+        num_layers=2,
+        d_model=min(cfg.d_model, 256),
+        d_ff=min(cfg.d_ff, 512),
+        vocab_size=min(cfg.vocab_size, 512),
+        train_fsdp=False,
+        serve_2d=False,
+    )
+    if cfg.num_heads:
+        small["num_heads"] = min(cfg.num_heads, 4)
+        small["num_kv_heads"] = max(1, min(cfg.num_kv_heads, 2))
+        small["head_dim"] = 64
+    if cfg.num_experts:
+        small["num_experts"] = min(cfg.num_experts, 4)
+    if cfg.ssm_state:
+        small["ssm_state"] = min(cfg.ssm_state, 16)
+    if cfg.encoder_layers:
+        small["encoder_layers"] = 2
+        small["encoder_seq"] = min(cfg.encoder_seq, 64)
+    if cfg.num_patches:
+        small["num_patches"] = min(cfg.num_patches, 16)
+        small["vision_dim"] = min(cfg.vision_dim or cfg.d_model, 128)
+    if cfg.sliding_window:
+        small["sliding_window"] = min(cfg.sliding_window, 64)
+    if cfg.attn_every:
+        small["attn_every"] = 2
+    small["fes_tail_layers"] = 1
+    small.update(kw)
+    return cfg.with_(**small)

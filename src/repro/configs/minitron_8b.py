@@ -1,0 +1,24 @@
+"""Minitron-8B — pruned Nemotron-4 [arXiv:2407.14679].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000.
+Dense full attention; long_500k runs via the beyond-paper SWA serving
+variant (window 4096) — see DESIGN.md.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    d_ff=16384,
+    vocab_size=256000,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    train_fsdp=True,
+    source="arXiv:2407.14679",
+)
+
+# beyond-paper long-context serving variant (sliding window)
+CONFIG_SWA = CONFIG.with_(sliding_window=4096)

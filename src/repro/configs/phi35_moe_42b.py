@@ -1,0 +1,23 @@
+"""Phi-3.5-MoE 42B (6.6B active) [hf:microsoft/Phi-3.5-MoE-instruct].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=6400, 16 experts top-2, vocab=32064.
+16 experts == model-axis size -> pure expert-parallel sharding.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    d_ff=6400,
+    vocab_size=32064,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    num_experts=16,
+    top_k=2,
+    moe_group_size=4096,   # blocked dispatch (§Perf H1)
+    train_fsdp=True,
+    source="hf:microsoft/Phi-3.5-MoE-instruct",
+)

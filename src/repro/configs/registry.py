@@ -1,0 +1,69 @@
+"""Architecture registry: --arch <id> -> ModelConfig."""
+from __future__ import annotations
+
+from repro.configs import (llama3_405b, minitron_8b, mistral_large_123b,
+                           mixtral_8x22b, paper_cnn, phi3_vision_4b,
+                           phi35_moe_42b, qwen15_110b, rwkv6_3b,
+                           whisper_medium, zamba2_1b)
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, reduced
+
+ARCHS: dict[str, ModelConfig] = {
+    "rwkv6-3b": rwkv6_3b.CONFIG,
+    "minitron-8b": minitron_8b.CONFIG,
+    "phi3.5-moe-42b-a6.6b": phi35_moe_42b.CONFIG,
+    "mistral-large-123b": mistral_large_123b.CONFIG,
+    "mixtral-8x22b": mixtral_8x22b.CONFIG,
+    "llama3-405b": llama3_405b.CONFIG,
+    "phi-3-vision-4.2b": phi3_vision_4b.CONFIG,
+    "whisper-medium": whisper_medium.CONFIG,
+    "zamba2-1.2b": zamba2_1b.CONFIG,
+    "qwen1.5-110b": qwen15_110b.CONFIG,
+    "paper-cnn": paper_cnn.CONFIG,
+}
+
+ASSIGNED = [k for k in ARCHS if k != "paper-cnn"]
+
+# long_500k applicability (sub-quadratic rule; see DESIGN.md §Arch-applicability)
+LONG_CONTEXT_OK = {
+    "rwkv6-3b": True,            # O(1) recurrent state
+    "zamba2-1.2b": True,         # O(1) SSM state + windowed shared attn
+    "mixtral-8x22b": True,       # native SWA ring cache
+    "minitron-8b": True,         # beyond-paper SWA serving variant
+    "phi3.5-moe-42b-a6.6b": False,
+    "mistral-large-123b": False,
+    "llama3-405b": False,
+    "phi-3-vision-4.2b": False,
+    "whisper-medium": False,     # enc-dec over 30-s audio
+    "qwen1.5-110b": False,
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def serving_config(name: str) -> ModelConfig:
+    """Config used for decode shapes (long-context variants where needed)."""
+    cfg = get_arch(name)
+    if name == "minitron-8b":
+        return minitron_8b.CONFIG_SWA
+    return cfg
+
+
+def pairs():
+    """All assigned (arch, shape) combos that must lower (40 total; skips
+    are recorded, not silently dropped)."""
+    out = []
+    for a in ASSIGNED:
+        for s in SHAPES.values():
+            skip = s.name == "long_500k" and not LONG_CONTEXT_OK[a]
+            out.append((a, s.name, skip))
+    return out

@@ -1,0 +1,131 @@
+"""Asynchronous AMA (paper §IV-B, Eqs. 6-11).
+
+Delayed updates from round n arriving at round t enter the aggregation with
+a staleness weight
+
+    gamma_i^- = b * (1 - sigmoid(t - n))          (Eq. 9)
+    alpha^-   = 1 - sigmoid(1)
+
+normalised so the "old knowledge" budget alpha + sum(gamma_i) equals the AMA
+schedule alpha0 + eta*t (Eq. 8) and alpha + beta + sum(gamma) = 1 (Eq. 7):
+
+    alpha   = alpha^- / (alpha^- + sum_i gamma_i^-) * (alpha0 + eta t)
+    gamma_i = gamma_i^- / (alpha^- + sum_i gamma_i^-) * (alpha0 + eta t)
+
+Server-side state is a RING BUFFER over arrival rounds: an update sent at
+round n with delay d arrives at n+d; its staleness d is known at send time,
+so the server accumulates gamma^-(d) * omega into slot (n+d) % Q together
+with the scalar sum of gamma^-. At round t the slot t % Q holds exactly
+sum_i gamma_i^- omega_ni and sum_i gamma_i^- — O(max_delay) parameter
+buffers regardless of client count, which is what makes the paper's scheme
+feasible when omega is billions of parameters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core.ama import (alpha_schedule, normalize_weights,
+                            weighted_client_sum)
+
+ALPHA_UNNORM = 1.0 - jax.nn.sigmoid(1.0)        # paper Eq. 9
+
+
+def gamma_unnorm(fl: FLConfig, staleness):
+    """gamma_i^- = b * (1 - sigmoid(staleness)); staleness = t - n >= 1.
+
+    Computed as b * sigmoid(-s): algebraically identical, but avoids the
+    catastrophic cancellation of 1 - sigmoid(s) for stale updates (f32
+    1-sigmoid(15) loses all significant digits)."""
+    s = jnp.asarray(staleness, jnp.float32)
+    return fl.staleness_b * jax.nn.sigmoid(-s)
+
+
+def init_queue(fl: FLConfig, params_like):
+    """Ring buffer of gamma^- pre-weighted pending sums.
+
+    Q = max_delay + 1 slots so an update with the maximum delay, enqueued
+    at round t, never collides with the slot being drained at round t.
+    """
+    Q = max(fl.max_delay, 1) + 1
+    zeros = jax.tree.map(
+        lambda x: jnp.zeros((Q,) + x.shape, jnp.float32), params_like)
+    return {"sum": zeros, "gamma": jnp.zeros((Q,), jnp.float32)}
+
+
+def enqueue(fl: FLConfig, queue, t, client_params, delayed, delays):
+    """Accumulate this round's DELAYED updates into their arrival slots.
+
+    client_params: leading client axis (C, ...); delayed: (C,) bool;
+    delays: (C,) int32 in [1, max_delay].
+    """
+    Q = queue["gamma"].shape[0]
+    C = delays.shape[0]
+    arrival = (jnp.asarray(t, jnp.int32) + delays) % Q          # (C,)
+    g = gamma_unnorm(fl, delays) * delayed.astype(jnp.float32)  # (C,)
+    onehot = jax.nn.one_hot(arrival, Q, dtype=jnp.float32) * g[:, None]
+
+    def acc(buf, cp):
+        add = jnp.einsum("c...,cq->q...", cp.astype(jnp.float32), onehot)
+        return buf + add
+
+    new_sum = jax.tree.map(acc, queue["sum"], client_params)
+    new_gamma = queue["gamma"] + jnp.sum(onehot, axis=0)
+    return {"sum": new_sum, "gamma": new_gamma}
+
+
+def pop_slot(queue, t):
+    """Read and clear the slot arriving at round t."""
+    Q = queue["gamma"].shape[0]
+    slot = jnp.asarray(t, jnp.int32) % Q
+    stale_sum = jax.tree.map(lambda b: b[slot], queue["sum"])
+    stale_gamma = queue["gamma"][slot]
+    cleared = {
+        "sum": jax.tree.map(lambda b: b.at[slot].set(0.0), queue["sum"]),
+        "gamma": queue["gamma"].at[slot].set(0.0),
+    }
+    return stale_sum, stale_gamma, cleared
+
+
+def async_ama_aggregate(fl: FLConfig, t, prev_global, client_params,
+                        data_sizes, on_time, queue):
+    """One asynchronous AMA round (Eq. 6). Returns (new_global, new_queue).
+
+    client_params are THIS round's local results; clients with
+    on_time=False contribute nothing now (their updates were enqueued by
+    the caller via ``enqueue`` and will arrive later).
+    """
+    stale_sum, stale_gamma, queue = pop_slot(queue, t)
+
+    A = alpha_schedule(fl, t)                       # alpha0 + eta t (Eq. 8)
+    beta = 1.0 - A
+    denom = ALPHA_UNNORM + stale_gamma
+    alpha = ALPHA_UNNORM / denom * A                # Eq. 10
+    gamma_scale = A / denom                         # Eq. 11 (applied to sum)
+
+    w, tot = normalize_weights(data_sizes, on_time)
+    agg = weighted_client_sum(client_params, w)
+    agg = jax.tree.map(lambda a, p: jnp.where(tot > 0, a, p), agg, prev_global)
+    # when no on-time arrivals, beta's budget reverts to the previous model
+    # via the agg fallback above, preserving alpha+beta+gamma = 1.
+
+    def mix(p, a, s):
+        out = (alpha * p.astype(jnp.float32) + beta * a.astype(jnp.float32)
+               + gamma_scale * s)
+        return out.astype(p.dtype)
+
+    new_global = jax.tree.map(mix, prev_global, agg, stale_sum)
+    return new_global, queue
+
+
+def mixing_weights(fl: FLConfig, t, staleness_list):
+    """Reference computation of (alpha, beta, gammas) for a set of stale
+    updates — used by tests/benchmarks to check Eqs. 7-11 analytically."""
+    A = float(min(fl.alpha0 + fl.eta * t, fl.alpha_cap))
+    g_un = [float(gamma_unnorm(fl, s)) for s in staleness_list]
+    denom = float(ALPHA_UNNORM) + sum(g_un)
+    alpha = float(ALPHA_UNNORM) / denom * A
+    gammas = [g / denom * A for g in g_un]
+    beta = 1.0 - A
+    return alpha, beta, gammas

@@ -1,0 +1,102 @@
+"""Client-side local training (paper Alg. 1, lines 11-16).
+
+One engine serves both scales:
+  * paper scale — m=10 selected clients vmapped, e local epochs;
+  * pod scale  — C cohorts, stacked params sharded over the "client" mesh
+    axis; no cross-client collectives inside the local scan (this is the
+    defining difference from data-parallel training).
+
+Algorithms: "ama_fes" (plain SGD + optional FES mask), "fedavg" (plain
+SGD), "fedprox" (proximal term: g += 2*rho*(omega - omega_0), Eq. 4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core import fes as fes_lib
+from repro.optim.masked import masked_update
+
+
+def make_local_train(model, fl: FLConfig):
+    """Returns local_train(global_params, batches, limited) ->
+    (client_params (C, ...), mean_loss (C,)).
+
+    batches: pytree with leading (C, steps, batch, ...) axes.
+    limited: (C,) bool — FES-limited cohorts (dynamic mask mode).
+    """
+    grad_fn = jax.value_and_grad(model.loss)
+
+    def one_client(params0, global_params, batches, limited):
+        mask = model.fes_mask(params0)
+        n_steps = jax.tree.leaves(batches)[0].shape[0]
+        # FedProx "partial work": limited devices run fewer local steps
+        if fl.algorithm == "fedprox":
+            n_active = jnp.where(
+                limited,
+                jnp.int32(max(1, int(fl.fedprox_partial * n_steps))),
+                jnp.int32(n_steps))
+        else:
+            n_active = jnp.int32(n_steps)
+
+        def step(carry, mb):
+            params, i = carry
+            loss, g = grad_fn(params, mb)
+            if fl.algorithm == "fedprox":
+                g = jax.tree.map(
+                    lambda gi, p, p0: gi + 2.0 * fl.fedprox_rho
+                    * (p.astype(jnp.float32)
+                       - p0.astype(jnp.float32)).astype(gi.dtype),
+                    g, params, global_params)
+            if fl.algorithm == "ama_fes" and fl.fes_enabled:
+                g = masked_update(g, mask, limited)
+            active = i < n_active
+            new_params = jax.tree.map(
+                lambda p, gi: jnp.where(
+                    active,
+                    (p.astype(jnp.float32)
+                     - fl.lr * gi.astype(jnp.float32)), p.astype(jnp.float32)
+                ).astype(p.dtype),
+                params, g)
+            return (new_params, i + 1), loss
+
+        (params, _), losses = jax.lax.scan(
+            step, (params0, jnp.int32(0)), batches)
+        return params, jnp.mean(losses)
+
+    def local_train(global_params, batches, limited):
+        return jax.vmap(one_client, in_axes=(None, None, 0, 0))(
+            global_params, global_params, batches, limited)
+
+    return local_train
+
+
+def make_fes_local_train(model, fl: FLConfig):
+    """STATIC FES local training: classifier-only differentiation.
+
+    The body backward is never traced — this is the lowering used to show
+    the FES computation reduction in the dry-run/roofline.
+    """
+    loss_fn = fes_lib.fes_loss_fn(model)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def one_client(params0, batches):
+        clf0, body = fes_lib.split_params(params0)
+
+        def step(clf, mb):
+            loss, g = grad_fn(clf, body, mb)
+            clf = jax.tree.map(
+                lambda p, gi: (p.astype(jnp.float32)
+                               - fl.lr * gi.astype(jnp.float32)).astype(p.dtype),
+                clf, g)
+            return clf, loss
+
+        clf, losses = jax.lax.scan(step, clf0, batches)
+        return fes_lib.merge_params(clf, body), jnp.mean(losses)
+
+    def local_train(global_params, batches, limited=None):
+        del limited
+        return jax.vmap(one_client, in_axes=(None, 0))(global_params, batches)
+
+    return local_train

@@ -1,0 +1,45 @@
+"""Feature-Extractor Sharing (paper §III, Eqs. 2-3).
+
+Computing-limited clients freeze the feature extractor omega^f and train
+only the classifier omega^c. Two execution modes:
+
+* ``split_params`` / ``merge_params`` — STATIC mode: differentiate only the
+  classifier subtree. The frozen body's backward pass is never built, so the
+  computation reduction is real (visible as reduced HLO FLOPs in the
+  dry-run), exactly the paper's point about CPU-friendliness.
+* ``masked_update`` (optim.masked) — DYNAMIC mode: one compiled step serves
+  cohorts whose limited-ness is a traced bool (mixed-cohort pod rounds).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.api import CLASSIFIER_KEYS
+
+
+def split_params(params):
+    """(classifier, feature_extractor) by the FES boundary."""
+    clf = {k: v for k, v in params.items() if k in CLASSIFIER_KEYS}
+    fes = {k: v for k, v in params.items() if k not in CLASSIFIER_KEYS}
+    return clf, fes
+
+
+def merge_params(clf, fes):
+    return {**fes, **clf}
+
+
+def fes_loss_fn(model):
+    """loss(classifier_params, frozen_body) — grads flow only into the
+    classifier; XLA never builds the body backward."""
+    def loss(clf, fes, batch):
+        return model.loss(merge_params(clf, jax.lax.stop_gradient(fes)), batch)
+    return loss
+
+
+def count_trainable(params, mask):
+    import numpy as np
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    train = sum(
+        int(np.prod(x.shape)) if m else 0
+        for x, m in zip(jax.tree.leaves(params), jax.tree.leaves(mask)))
+    return train, total

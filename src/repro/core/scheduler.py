@@ -1,0 +1,52 @@
+"""Deterministic heterogeneity simulator (paper §V settings).
+
+Generates, from a seed, the per-round schedule the paper's environment
+implies: which clients are selected (m of K), which are computing-limited
+(ratio p, a FIXED subset of devices, as in the paper), and which uploads are
+delayed (prob. p_delay, delay ~ U{1..max_delay}).
+
+The schedule is data, not code: the same compiled round consumes any
+scenario (moderate 30% / severe 70%, max delay 5/10/15...).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs.base import FLConfig
+
+
+@dataclass
+class RoundSchedule:
+    selected: np.ndarray    # (m,) client indices
+    limited: np.ndarray     # (m,) bool — computing-limited (FES) clients
+    delayed: np.ndarray     # (m,) bool — upload delayed
+    delays: np.ndarray      # (m,) int32 in [1, max_delay] (1 where not delayed)
+
+
+class HeterogeneitySchedule:
+    def __init__(self, fl: FLConfig):
+        self.fl = fl
+        rng = np.random.RandomState(fl.seed)
+        # fixed computing-limited subset (paper: a device *is* limited)
+        k = int(round(fl.p_limited * fl.num_clients))
+        self.limited_set = set(
+            rng.choice(fl.num_clients, size=k, replace=False).tolist())
+        self._rng = np.random.RandomState(fl.seed + 1)
+
+    def round(self, t: int) -> RoundSchedule:
+        fl = self.fl
+        rng = np.random.RandomState(fl.seed * 1_000_003 + t)  # reproducible per-round
+        sel = rng.choice(fl.num_clients, size=fl.clients_per_round,
+                         replace=False).astype(np.int32)
+        limited = np.array([i in self.limited_set for i in sel])
+        if fl.max_delay > 0 and fl.p_delay > 0:
+            delayed = rng.rand(fl.clients_per_round) < fl.p_delay
+            delays = rng.randint(1, fl.max_delay + 1,
+                                 size=fl.clients_per_round).astype(np.int32)
+        else:
+            delayed = np.zeros(fl.clients_per_round, bool)
+            delays = np.ones(fl.clients_per_round, np.int32)
+        delays = np.where(delayed, delays, 1).astype(np.int32)
+        return RoundSchedule(sel, limited, delayed, delays)

@@ -1,0 +1,136 @@
+"""Paper-scale federated simulation (K clients, m selected/round).
+
+Drives the same jitted round engine as the pod path, but with the full
+heterogeneous environment of §V: non-iid 2-class shards, a fixed
+computing-limited subset (FES), and stochastic upload delays consumed by
+the asynchronous AMA ring buffer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import async_ama
+from repro.core.ama import ama_aggregate, fedavg_aggregate
+from repro.core.client import make_local_train
+from repro.core.scheduler import HeterogeneitySchedule
+
+
+@dataclass
+class History:
+    test_acc: list = field(default_factory=list)
+    test_loss: list = field(default_factory=list)
+    train_loss: list = field(default_factory=list)
+
+    def stability_variance(self, last: int = 50) -> float:
+        """Paper's stability metric: variance of test accuracy over the
+        last ``last`` rounds (in percentage points squared)."""
+        accs = np.array(self.test_acc[-last:]) * 100.0
+        return float(np.var(accs))
+
+    def final_accuracy(self, last: int = 50) -> float:
+        return float(np.mean(self.test_acc[-last:]))
+
+
+class FederatedSimulation:
+    def __init__(self, model, fl: FLConfig, clients, test_data,
+                 eval_fn=None, eval_batch: int = 512):
+        self.model = model
+        self.fl = fl
+        self.clients = clients
+        self.test_data = test_data
+        self.sched = HeterogeneitySchedule(fl)
+        self.rng = np.random.RandomState(fl.seed + 7)
+        self._local_train = jax.jit(make_local_train(model, fl))
+        self._eval_fn = eval_fn
+        self.eval_batch = eval_batch
+
+        self.params = model.init(jax.random.PRNGKey(fl.seed))
+        self.t = 0
+        self.queue = (async_ama.init_queue(fl, self.params)
+                      if fl.max_delay > 0 else None)
+
+        self._agg_sync = jax.jit(
+            lambda t, prev, cp, ds, ot: ama_aggregate(fl, t, prev, cp, ds, ot))
+        self._agg_fedavg = jax.jit(
+            lambda prev, cp, ds, keep: fedavg_aggregate(prev, cp, ds, keep))
+        if fl.max_delay > 0:
+            self._enqueue = jax.jit(
+                lambda q, t, cp, d, dl: async_ama.enqueue(fl, q, t, cp, d, dl))
+            self._agg_async = jax.jit(
+                lambda t, prev, cp, ds, ot, q: async_ama.async_ama_aggregate(
+                    fl, t, prev, cp, ds, ot, q))
+
+    # ------------------------------------------------------------------
+    def _steps_per_round(self) -> int:
+        n_min = min(len(c) for c in self.clients)
+        per_epoch = max(1, n_min // self.fl.local_batch_size)
+        return self.fl.local_epochs * per_epoch
+
+    def run_round(self) -> float:
+        fl = self.fl
+        rs = self.sched.round(self.t)
+        steps = self._steps_per_round()
+        batches = [self.clients[i].sample_steps(self.rng, steps,
+                                                fl.local_batch_size)
+                   for i in rs.selected]
+        batches = {k: np.stack([b[k] for b in batches]) for k in batches[0]}
+        limited = jnp.asarray(rs.limited)
+        data_sizes = jnp.asarray(
+            [len(self.clients[i]) for i in rs.selected], jnp.float32)
+
+        client_params, losses = self._local_train(self.params, batches, limited)
+        on_time = jnp.asarray(~rs.delayed)
+
+        if fl.algorithm == "fedavg":
+            keep = jnp.logical_and(on_time, jnp.asarray(~rs.limited))
+            self.params = self._agg_fedavg(self.params, client_params,
+                                           data_sizes, keep)
+        elif fl.algorithm == "fedprox":
+            self.params = self._agg_fedavg(self.params, client_params,
+                                           data_sizes, on_time)
+        elif fl.max_delay > 0:
+            self.queue = self._enqueue(self.queue, self.t, client_params,
+                                       jnp.asarray(rs.delayed),
+                                       jnp.asarray(rs.delays))
+            self.params, self.queue = self._agg_async(
+                self.t, self.params, client_params, data_sizes, on_time,
+                self.queue)
+        else:
+            self.params = self._agg_sync(self.t, self.params, client_params,
+                                         data_sizes, on_time)
+        self.t += 1
+        return float(jnp.mean(losses))
+
+    # ------------------------------------------------------------------
+    def evaluate(self):
+        if self._eval_fn is None:
+            from repro.models import cnn
+            logits, _ = cnn.forward(self.params, self.model.cfg,
+                                    self.test_data)
+            labels = self.test_data["label"]
+            acc = float(jnp.mean((jnp.argmax(logits, -1) == labels)))
+            from repro.models.layers import cross_entropy_loss
+            loss = float(cross_entropy_loss(logits, labels))
+            return acc, loss
+        return self._eval_fn(self.params, self.test_data)
+
+    def run(self, rounds: int | None = None, eval_every: int = 1,
+            verbose: bool = False) -> History:
+        hist = History()
+        rounds = rounds or self.fl.rounds
+        for r in range(rounds):
+            tl = self.run_round()
+            hist.train_loss.append(tl)
+            if (r + 1) % eval_every == 0:
+                acc, loss = self.evaluate()
+                hist.test_acc.append(acc)
+                hist.test_loss.append(loss)
+                if verbose and (r + 1) % 10 == 0:
+                    print(f"  round {r+1:4d} train_loss={tl:.4f} "
+                          f"test_acc={acc:.4f}")
+        return hist

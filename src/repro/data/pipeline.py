@@ -1,0 +1,39 @@
+"""Client data pipeline: per-round local batch sampling."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ClientDataset:
+    """One client's local shard with epoch-style batch sampling."""
+
+    def __init__(self, data: dict, indices: np.ndarray):
+        self.data = data
+        self.indices = np.asarray(indices)
+
+    def __len__(self):
+        return len(self.indices)
+
+    def sample_steps(self, rng: np.random.RandomState, steps: int,
+                     batch_size: int):
+        """(steps, batch, ...) arrays, sampling with reshuffled epochs."""
+        n = len(self.indices)
+        need = steps * batch_size
+        reps = int(np.ceil(need / max(n, 1)))
+        idx = np.concatenate([rng.permutation(self.indices) for _ in range(reps)])
+        idx = idx[:need].reshape(steps, batch_size)
+        return {k: v[idx] for k, v in self.data.items()}
+
+
+def build_clients(data: dict, partition: list[np.ndarray]) -> list[ClientDataset]:
+    return [ClientDataset(data, idx) for idx in partition]
+
+
+def batch_iterator(data: dict, batch_size: int, seed: int = 0):
+    n = len(next(iter(data.values())))
+    rng = np.random.RandomState(seed)
+    while True:
+        order = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            sl = order[i:i + batch_size]
+            yield {k: v[sl] for k, v in data.items()}

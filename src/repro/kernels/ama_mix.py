@@ -1,0 +1,60 @@
+"""Fused AMA parameter-mix kernel (the paper's server-side hot loop).
+
+Computes  out = alpha * prev + sum_k weights[k] * stacked[k]  over a flat
+parameter vector. At LLM scale this is purely HBM-bandwidth-bound:
+(K+1) streams in, 1 stream out. The fused kernel reads each element once
+and accumulates in VREGs, instead of K materialised intermediates
+(jnp would need K-1 temporaries or an (K, N) einsum reduction buffer).
+
+Grid: 1-D over N/block tiles. Block shape (block,) with block a multiple
+of 1024 (=8 sublanes x 128 lanes of f32) keeps the VPU fully fed; the K
+stacked rows of a tile are staged through VMEM one at a time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 64 * 1024
+
+
+def _kernel(prev_ref, stacked_ref, alpha_ref, w_ref, out_ref, *, K: int):
+    a = alpha_ref[0]
+    acc = prev_ref[...].astype(jnp.float32) * a
+    for kk in range(K):                       # static unroll over clients
+        acc += stacked_ref[kk, :].astype(jnp.float32) * w_ref[kk]
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def ama_mix_flat(prev, stacked, alpha, weights, *, block: int = DEFAULT_BLOCK,
+                 interpret: bool = False):
+    """prev: (N,); stacked: (K, N); alpha: scalar; weights: (K,)."""
+    (N,) = prev.shape
+    K = stacked.shape[0]
+    block = min(block, N)
+    pad = (-N) % block
+    if pad:
+        prev = jnp.pad(prev, (0, pad))
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    n_blocks = prev.shape[0] // block
+    alpha = jnp.asarray(alpha, jnp.float32).reshape(1)
+    weights = weights.astype(jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, K=K),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((K, block), lambda i: (0, i)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(prev.shape, prev.dtype),
+        interpret=interpret,
+    )(prev, stacked, alpha, weights)
+    return out[:N] if pad else out

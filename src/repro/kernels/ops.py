@@ -1,0 +1,54 @@
+"""jit'd wrappers: the public kernel API used by the rest of the framework.
+
+On CPU (this container) every wrapper runs the Pallas kernel in interpret
+mode or falls back to the ref — the TPU path is the pallas_call itself.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ama_mix import ama_mix_flat
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+__all__ = ["ama_mix_flat", "flash_attention", "rwkv6_scan",
+           "ama_mix_tree", "ama_mix_pairwise"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ama_mix_tree(prev_tree, stacked_tree, alpha, weights, *,
+                 interpret: bool | None = None):
+    """AMA aggregation over whole param pytrees through the fused kernel.
+
+    prev_tree leaves (..., ); stacked_tree leaves (K, ...).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+
+    def one(p, s):
+        K = s.shape[0]
+        flat_p = p.reshape(-1)
+        flat_s = s.reshape(K, -1)
+        out = ama_mix_flat(flat_p, flat_s, alpha, weights,
+                           interpret=interpret)
+        return out.reshape(p.shape)
+
+    return jax.tree.map(one, prev_tree, stacked_tree)
+
+
+def ama_mix_pairwise(prev_tree, agg_tree, alpha, *, interpret=None):
+    """alpha*prev + (1-alpha)*agg via the same kernel (K=1)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+
+    def one(p, g):
+        flat_p = p.reshape(-1)
+        flat_s = g.reshape(1, -1)
+        w = (1.0 - jnp.asarray(alpha, jnp.float32)).reshape(1)
+        return ama_mix_flat(flat_p, flat_s, alpha, w,
+                            interpret=interpret).reshape(p.shape)
+
+    return jax.tree.map(one, prev_tree, agg_tree)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ama_mix_ref(prev, stacked, alpha, weights):
+    """alpha*prev + sum_k weights[k]*stacked[k], f32 accumulation.
+
+    prev: (N,) or any shape; stacked: (K, *prev.shape); weights: (K,).
+    """
+    acc = alpha.astype(jnp.float32) * prev.astype(jnp.float32)
+    acc = acc + jnp.einsum(
+        "k...,k->...", stacked.astype(jnp.float32), weights.astype(jnp.float32))
+    return acc.astype(prev.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Plain softmax attention. q/k/v: (B, S, H, hd) (kv already repeated)."""
+    B, S, H, hd = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = kpos <= qpos
+    if window:
+        mask = jnp.logical_and(mask, kpos > qpos - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0):
+    """RWKV-6 recurrence oracle.
+
+    r/k/v/w: (B, S, H, hd) f32 (w in (0,1)); u: (H, hd); s0: (B, H, hd, hd).
+    Returns (y (B,S,H,hd), s_final).
+    """
+    def step(S_, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S_ + u[..., None] * kv)
+        S_ = w_t[..., :, None] * S_ + kv
+        return S_, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin

@@ -1,0 +1,90 @@
+"""RWKV-6 recurrence kernel (TPU Pallas).
+
+State S: (hd_k, hd_v) per (batch, head). The CUDA wkv6 kernel assigns one
+thread per channel; the TPU adaptation instead keeps S resident in VMEM
+for a whole sequence CHUNK per grid step and walks time sequentially
+inside the kernel — the (hd, hd) outer products and r-contractions are
+VPU/MXU work, and sequential-over-time, parallel-over-(B, H) matches the
+TPU's grid model (no warp shuffles needed).
+
+Grid: (B*H, S/chunk). The time axis must be the LAST grid dimension: TPU
+grid iteration is sequential over the trailing axis, so the VMEM-carried
+state (in/out aliased accumulator block) flows chunk to chunk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, s_ref,
+            *, chunk: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_ref[...] = s0_ref[...]
+
+    u = u_ref[0].astype(jnp.float32)                   # (hd,)
+    S = s_ref[0].astype(jnp.float32)                   # (hd, hd)
+
+    def step(t, S):
+        r_t = r_ref[0, t].astype(jnp.float32)          # (hd,)
+        k_t = k_ref[0, t].astype(jnp.float32)
+        v_t = v_ref[0, t].astype(jnp.float32)
+        w_t = w_ref[0, t].astype(jnp.float32)
+        kv = k_t[:, None] * v_t[None, :]               # (hd, hd)
+        y = (r_t[:, None] * (S + u[:, None] * kv)).sum(axis=0)
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return w_t[:, None] * S + kv
+
+    S = jax.lax.fori_loop(0, chunk, step, S)
+    s_ref[0] = S.astype(s_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, s0, *, chunk: int = 128,
+               interpret: bool = False):
+    """r/k/v/w: (B, S, H, hd) f32; u: (H, hd); s0: (B, H, hd, hd) f32.
+
+    Returns (y (B, S, H, hd) f32, s_final (B, H, hd, hd) f32).
+    """
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+
+    def fold(x):        # (B*H, S, hd)
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, hd).astype(jnp.float32)
+
+    rf, kf, vf, wf = fold(r), fold(k), fold(v), fold(w)
+    uf = jnp.broadcast_to(u[None].astype(jnp.float32),
+                          (B, H, hd)).reshape(B * H, hd)
+    s0f = s0.reshape(B * H, hd, hd).astype(jnp.float32)
+
+    grid = (B * H, S // chunk)
+    y, s_fin = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, hd), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, t: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, t: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, hd, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf, s0f)
+    y = y.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return y, s_fin.reshape(B, H, hd, hd)

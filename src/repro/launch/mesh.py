@@ -1,0 +1,79 @@
+"""Production mesh definitions (TPU v5e pods).
+
+``make_production_mesh`` is the canonical entry point (spec'd shape/axes).
+The federated TRAIN mesh is a re-view of the same devices as
+("client", "dsub", "model"): C client cohorts x FSDP x tensor-parallel.
+On the multi-pod mesh the pod axis folds into the client axis — each pod
+hosts client cohorts and the AMA aggregation is the only cross-pod
+collective (the paper's communication pattern).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def fl_view(mesh: Mesh, cohorts: int, expert_parallel: int = 0,
+            model_width: int = 0) -> Mesh:
+    """("client", "dsub", "model") view of a production mesh.
+
+    Single-pod (16, 16): client x dsub factorise the 16-wide data axis.
+    Multi-pod (2, 16, 16): the pod axis multiplies the client axis, i.e.
+    2*cohorts client groups, cross-pod traffic only at aggregation.
+
+    expert_parallel > 0 factorises the model axis into
+    ("expert", "etp") = (E, model/E) for MoE archs whose expert count does
+    not equal the model-axis width: experts live on their own sub-axis and
+    tensor-parallel runs within each expert (§Perf H1). Dense params then
+    shard over the tuple ("expert", "etp") == the whole model axis.
+    """
+    devices = np.asarray(mesh.devices)
+    if devices.ndim == 3:                       # (pod, data, model)
+        n_pod, n_data, n_model = devices.shape
+        n_client = n_pod * cohorts
+        dsub = n_data // cohorts
+        if dsub * cohorts != n_data:
+            raise ValueError(f"cohorts={cohorts} must divide data={n_data}")
+    else:                                       # (data, model)
+        n_data, n_model = devices.shape
+        n_client = cohorts
+        dsub = n_data // cohorts
+        if dsub * cohorts != n_data:
+            raise ValueError(f"cohorts={cohorts} must divide data={n_data}")
+    if model_width and model_width != n_model:
+        # per-arch TP width (e.g. 8 so rwkv6's 40 heads shard evenly);
+        # the freed factor widens FSDP. Total devices unchanged. On small
+        # test meshes that can't honour the width, keep the default.
+        total = dsub * n_model
+        if total % model_width == 0 and total >= model_width:
+            dsub, n_model = total // model_width, model_width
+    if expert_parallel and n_model % expert_parallel == 0 \
+            and expert_parallel < n_model:
+        dv = devices.reshape(n_client, dsub, expert_parallel,
+                             n_model // expert_parallel)
+        return Mesh(dv, ("client", "dsub", "expert", "etp"))
+    dv = devices.reshape(n_client, dsub, n_model)
+    return Mesh(dv, ("client", "dsub", "model"))
+
+
+def serve_view(mesh: Mesh, expert_parallel: int = 0) -> Mesh:
+    """("data", "model") view (folds the pod axis into data if present)."""
+    devices = np.asarray(mesh.devices)
+    if devices.ndim == 3:
+        p, d, m = devices.shape
+        devices = devices.reshape(p * d, m)
+    n_data, n_model = devices.shape
+    if expert_parallel and n_model % expert_parallel == 0 \
+            and expert_parallel < n_model:
+        dv = devices.reshape(n_data, expert_parallel,
+                             n_model // expert_parallel)
+        return Mesh(dv, ("data", "expert", "etp"))
+    return Mesh(devices, ("data", "model"))

@@ -1,0 +1,125 @@
+"""Unified model API: every architecture exposes the same surface.
+
+    model = build_model(cfg)
+    params = model.init(key)
+    loss   = model.loss(params, batch)            # train / FL local step
+    logits, aux = model.forward(params, batch)    # full-seq (prefill)
+    logits, cache = model.decode_step(params, token, position, cache)
+    mask   = model.fes_mask(params)               # paper Eq.(2) split: True = classifier
+
+``input_specs`` builds ShapeDtypeStruct stand-ins for the multi-pod dry-run
+(no allocation). Modality frontends (audio conv codec, ViT) are stubs per
+the assignment: specs hand the backbone precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import cnn, encdec, transformer
+
+
+# Top-level param keys that constitute the paper's "classifier" (omega^c).
+CLASSIFIER_KEYS = ("tail", "final_norm", "lm_head", "fc1", "fc2", "fc3")
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[Any], Any]
+    loss: Callable[[Any, Any], jax.Array]
+    forward: Callable[[Any, Any], Any]
+    decode_step: Callable[..., Any] | None
+    init_decode_cache: Callable[..., Any] | None
+    prefill: Callable[[Any, Any], Any] | None = None
+
+    def fes_mask(self, params):
+        """True leaves = trainable under FES (the classifier omega^c)."""
+        return {
+            k: jax.tree.map(lambda _: k in CLASSIFIER_KEYS, v)
+            for k, v in params.items()
+        }
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "cnn":
+        return Model(
+            cfg=cfg,
+            init=lambda key: cnn.init_params(cfg, key),
+            loss=lambda p, b: cnn.loss_fn(p, cfg, b),
+            forward=lambda p, b: cnn.forward(p, cfg, b),
+            decode_step=None,
+            init_decode_cache=None,
+        )
+    if cfg.family == "audio":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(cfg, key),
+            loss=lambda p, b: encdec.loss_fn(p, cfg, b),
+            forward=lambda p, b: encdec.forward(p, cfg, b),
+            decode_step=lambda p, tok, pos, cache: encdec.decode_step(
+                p, cfg, tok, pos, cache),
+            init_decode_cache=lambda p, frame_emb, max_len: encdec.init_decode_cache(
+                p, cfg, frame_emb, max_len),
+            prefill=lambda p, b: encdec.prefill(p, cfg, b),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        loss=lambda p, b: transformer.loss_fn(p, cfg, b),
+        forward=lambda p, b: transformer.forward(p, cfg, b),
+        decode_step=lambda p, tok, pos, cache: transformer.decode_step(
+            p, cfg, tok, pos, cache),
+        init_decode_cache=lambda p, batch, max_len: transformer.init_decode_cache(
+            cfg, batch, max_len),
+        prefill=lambda p, b: transformer.prefill(p, cfg, b),
+    )
+
+
+# --------------------------------------------------------- input specs -----
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for a (arch x input-shape) pair.
+
+    train/prefill -> {"batch": {...}}
+    decode        -> {"token", "position", "cache"} (cache built structurally
+                     via eval_shape so no memory is touched).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    if cfg.family == "cnn":
+        return {"batch": {"image": _sds((B, 28, 28, 1), jnp.float32),
+                          "label": _sds((B,), jnp.int32)}}
+
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["patch_emb"] = _sds(
+                (B, cfg.num_patches, cfg.vision_dim or cfg.d_model), dt)
+        if cfg.family == "audio":
+            batch["frame_emb"] = _sds((B, cfg.encoder_seq, cfg.d_model), dt)
+        return {"batch": batch}
+
+    # decode: one new token against a seq_len-sized KV cache/state
+    token = _sds((B,), jnp.int32)
+    position = _sds((B,), jnp.int32)
+    if cfg.family == "audio":
+        params_shape = jax.eval_shape(
+            lambda k: encdec.init_params(cfg, k), jax.random.PRNGKey(0))
+        frame_sds = _sds((B, cfg.encoder_seq, cfg.d_model), dt)
+        cache = jax.eval_shape(
+            lambda p, f: encdec.init_decode_cache(p, cfg, f, S),
+            params_shape, frame_sds)
+    else:
+        cache = jax.eval_shape(
+            lambda: transformer.init_decode_cache(cfg, B, S))
+    return {"token": token, "position": position, "cache": cache}

@@ -1,0 +1,214 @@
+"""Attention: GQA + RoPE + optional sliding window.
+
+Two execution paths:
+  * ``chunked_attention`` — XLA-native online-softmax over KV chunks
+    (lax.scan). O(S * chunk) transient memory, compiles on any backend;
+    this is what the multi-pod dry-run lowers.
+  * ``kernels.flash_attention`` — Pallas TPU kernel (same math), used on
+    real TPU hardware and validated in interpret mode by tests.
+
+Decode uses a KV cache; sliding-window archs use a ring-buffer cache of
+size ``window`` so the long_500k cache is O(window), not O(S).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense, dense_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.num_heads * hd, dtype, cfg.qkv_bias),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.num_kv_heads * hd, dtype, cfg.qkv_bias),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.num_kv_heads * hd, dtype, cfg.qkv_bias),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, cfg.d_model, dtype),
+    }
+
+
+def _split_heads(x, n_heads, hd):
+    return x.reshape(*x.shape[:-1], n_heads, hd)
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def chunked_attention(q, k, v, q_positions, kv_positions, *, causal: bool,
+                      window: int = 0, chunk: int = 512, unroll: bool = False):
+    """Online-softmax attention, blocked over (q-block x kv-chunk).
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, H, hd) (kv already repeated to H heads).
+    positions: (B, Sq) / (B, Skv) absolute positions (for masking).
+
+    When queries and keys cover the SAME aligned range (self-attention,
+    train/prefill), fully-masked kv chunks are skipped STRUCTURALLY: each
+    q-block only visits kv chunks inside its causal frontier and sliding
+    window — 2x FLOP saving for causal, ~S/window for SWA (§Perf H1-it3).
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    chunk = min(chunk, Skv)
+    pad = (-Skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=2**30)
+    n_chunks = k.shape[1] // chunk
+    scale = hd ** -0.5
+    qf = (q * scale).astype(jnp.float32)
+
+    kc = k.reshape(B, n_chunks, chunk, H, hd)
+    vc = v.reshape(B, n_chunks, chunk, H, hd)
+    pc = kv_positions.reshape(B, n_chunks, chunk)
+
+    def make_step(qb, q_pos_b):
+        """Online-softmax update for one (q-block, kv-chunk) pair."""
+        def step(carry, inp):
+            m, l, acc = carry           # (B,H,qb), (B,H,qb), (B,H,qb,hd)
+            kb, vb, pb = inp            # (B,chunk,H,hd), ..., (B,chunk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb.astype(jnp.float32))
+            # padded KV slots carry position 2**30: always masked out
+            valid = (pb < 2**29)[:, None, None, :]
+            mask = jnp.logical_and(
+                valid,
+                pb[:, None, None, :] <= q_pos_b[:, None, :, None]
+                if causal else True)
+            if window:
+                mask = jnp.logical_and(
+                    mask, pb[:, None, None, :]
+                    > q_pos_b[:, None, :, None] - window)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+        return step
+
+    def run_range(qb, q_pos_b, k_lo, k_hi):
+        """Online softmax of one q block over kv chunks [k_lo, k_hi)."""
+        nb = qb.shape[1]
+        m0 = jnp.full((B, H, nb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, nb), jnp.float32)
+        a0 = jnp.zeros((B, H, nb, hd), jnp.float32)
+        xs = (jnp.moveaxis(kc[:, k_lo:k_hi], 1, 0),
+              jnp.moveaxis(vc[:, k_lo:k_hi], 1, 0),
+              jnp.moveaxis(pc[:, k_lo:k_hi], 1, 0))
+        (m, l, acc), _ = jax.lax.scan(
+            make_step(qb, q_pos_b), (m0, l0, a0), xs,
+            unroll=(k_hi - k_lo) if unroll else 1)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(out, 1, 2)                 # (B, nb, H, hd)
+
+    # structural chunk skipping needs statically-aligned self-attention
+    aligned = causal and Sq == Skv and Sq % chunk == 0
+    if not aligned:
+        return run_range(qf, q_positions, 0, n_chunks).astype(q.dtype)
+
+    n_q = Sq // chunk
+    outs = []
+    for qi in range(n_q):
+        sl = slice(qi * chunk, (qi + 1) * chunk)
+        hi = qi + 1                                    # causal frontier
+        lo = max(0, (qi * chunk - window) // chunk) if window else 0
+        outs.append(run_range(qf[:, sl], q_positions[:, sl], lo, hi))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def attention_fwd(p, cfg, x, positions, *, causal=True, kv_x=None,
+                  kv_positions=None, window=None):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    kv_x: source of K/V (cross-attention) — defaults to x (self-attention).
+    """
+    hd = cfg.resolved_head_dim
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    kv_src = x if kv_x is None else kv_x
+    kv_pos = positions if kv_positions is None else kv_positions
+    q = _split_heads(dense(p["wq"], x), cfg.num_heads, hd)
+    k = _split_heads(dense(p["wk"], kv_src), cfg.num_kv_heads, hd)
+    v = _split_heads(dense(p["wv"], kv_src), cfg.num_kv_heads, hd)
+    if causal or kv_x is None:           # rope only for self-attention
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_pos, cfg.rope_theta)
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    w = cfg.sliding_window if window is None else window
+    out = chunked_attention(q, k, v, positions, kv_pos, causal=causal, window=w,
+                            chunk=cfg.attn_chunk, unroll=cfg.unroll_chunks)
+    return dense(p["wo"], out.reshape(*x.shape[:-1], cfg.num_heads * hd))
+
+
+# ------------------------------------------------------------- decoding ----
+
+def init_kv_cache(cfg, batch, max_len, dtype):
+    """Ring-buffer cache when sliding_window > 0, else linear cache."""
+    hd = cfg.resolved_head_dim
+    L = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return {
+        "k": jnp.zeros((batch, L, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, L, cfg.num_kv_heads, hd), dtype),
+        "pos": jnp.full((batch, L), -1, jnp.int32),   # absolute positions held
+    }
+
+
+def attention_decode(p, cfg, x, cache, position):
+    """One-token decode. x: (B, 1, d); position: (B,) absolute index."""
+    hd = cfg.resolved_head_dim
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    B = x.shape[0]
+    q = _split_heads(dense(p["wq"], x), cfg.num_heads, hd)
+    k = _split_heads(dense(p["wk"], x), cfg.num_kv_heads, hd)
+    v = _split_heads(dense(p["wv"], x), cfg.num_kv_heads, hd)
+    q = apply_rope(q, position[:, None], cfg.rope_theta)
+    k = apply_rope(k, position[:, None], cfg.rope_theta)
+
+    L = cache["k"].shape[1]
+    slot = (position % L).astype(jnp.int32)            # ring slot
+    bidx = jnp.arange(B)
+    new_k = cache["k"].at[bidx, slot].set(k[:, 0])
+    new_v = cache["v"].at[bidx, slot].set(v[:, 0])
+    new_pos = cache["pos"].at[bidx, slot].set(position)
+    cache = {"k": new_k, "v": new_v, "pos": new_pos}
+
+    kk = _repeat_kv(cache["k"], n_rep).astype(jnp.float32)
+    vv = _repeat_kv(cache["v"], n_rep).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", (q * hd**-0.5).astype(jnp.float32), kk)
+    valid = cache["pos"] >= 0
+    mask = jnp.logical_and(valid, cache["pos"] <= position[:, None])
+    if cfg.sliding_window:
+        mask = jnp.logical_and(
+            mask, cache["pos"] > position[:, None] - cfg.sliding_window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", a, vv).astype(x.dtype)
+    out = out.reshape(B, 1, cfg.num_heads * hd)
+    return dense(p["wo"], out), cache
+
+
+def cross_attention_decode(p, cfg, x, enc_k, enc_v):
+    """Decode-time cross-attention against precomputed encoder K/V.
+
+    enc_k/enc_v: (B, S_enc, KH, hd) — computed once at the start of decode.
+    """
+    hd = cfg.resolved_head_dim
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    B = x.shape[0]
+    q = _split_heads(dense(p["wq"], x), cfg.num_heads, hd)
+    kk = _repeat_kv(enc_k, n_rep).astype(jnp.float32)
+    vv = _repeat_kv(enc_v, n_rep).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", (q * hd**-0.5).astype(jnp.float32), kk)
+    a = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", a, vv).astype(x.dtype)
+    return dense(p["wo"], out.reshape(B, 1, cfg.num_heads * hd))

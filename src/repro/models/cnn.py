@@ -1,0 +1,61 @@
+"""The paper's own task model: 2 conv (5x5) + 3 FC layers for 28x28 images.
+
+This is the model AMA-FES is evaluated on (MNIST / FMNIST, Section V).
+FES split is exactly the paper's: feature extractor = the conv layers,
+classifier = the three FC layers ("all the computing-limited devices ...
+train only the final three FC layers").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import cross_entropy_loss, dense, dense_init
+
+
+def init_params(cfg, key):
+    ks = jax.random.split(key, 5)
+    c1, c2 = 10, 20
+    p = {
+        # feature extractor (conv) — paper's omega^f
+        "body": {
+            "conv1": {"w": 0.1 * jax.random.normal(ks[0], (5, 5, 1, c1))},
+            "conv2": {"w": 0.1 * jax.random.normal(ks[1], (5, 5, c1, c2))},
+        },
+        # classifier (3 FC) — paper's omega^c
+        "fc1": dense_init(ks[2], 4 * 4 * c2, 120, jnp.float32, bias=True),
+        "fc2": dense_init(ks[3], 120, 84, jnp.float32, bias=True),
+        "fc3": dense_init(ks[4], 84, cfg.vocab_size, jnp.float32, bias=True),
+    }
+    return p
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def forward(params, cfg, batch):
+    """batch: {"image": (B, 28, 28, 1)} -> logits (B, n_classes)."""
+    x = batch["image"].astype(jnp.float32)
+    x = jax.nn.relu(_conv(x, params["body"]["conv1"]["w"]))     # (B,24,24,10)
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                              (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = jax.nn.relu(_conv(x, params["body"]["conv2"]["w"]))     # (B,8,8,20)
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                              (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)                               # (B, 320)
+    x = jax.nn.relu(dense(params["fc1"], x))
+    x = jax.nn.relu(dense(params["fc2"], x))
+    return dense(params["fc3"], x), jnp.float32(0.0)
+
+
+def loss_fn(params, cfg, batch):
+    logits, _ = forward(params, cfg, batch)
+    return cross_entropy_loss(logits, batch["label"])
+
+
+def accuracy(params, cfg, batch):
+    logits, _ = forward(params, cfg, batch)
+    return jnp.mean((jnp.argmax(logits, -1) == batch["label"]).astype(jnp.float32))

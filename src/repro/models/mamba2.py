@@ -1,0 +1,146 @@
+"""Mamba-2 (SSD) block, as used by Zamba2 (arXiv:2411.15242).
+
+Structured state-space duality with scalar-per-head decay:
+    h_t = a_t * h_{t-1} + x_t (outer) B_t        h: (P, N) per head
+    y_t = h_t @ C_t + D * x_t
+with a_t = exp(-softplus(dt_t) * A), dt data-dependent, plus a short causal
+conv on the (x, B, C) stream and a gated output (silu(z)).
+
+Projections + conv run in parallel over the sequence; only the O(P*N)
+state recurrence is a lax.scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init, rmsnorm
+
+HEAD_DIM = 64   # P
+
+
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    N = cfg.ssm_state
+    d_inner = 2 * d
+    H = d_inner // HEAD_DIM
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj -> [x (d_inner), z (d_inner), B (N), C (N), dt (H)]
+        "w_in": dense_init(ks[0], d, 2 * d_inner + 2 * N + H, dtype),
+        "conv": 0.1 * jax.random.normal(
+            ks[1], (cfg.conv_width, d_inner + 2 * N), jnp.float32).astype(dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_g": jnp.ones((d_inner,), dtype),
+        "w_out": dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    d_inner = 2 * d
+    H = d_inner // HEAD_DIM
+    return d_inner, H, cfg.ssm_state
+
+
+def _causal_conv(xbc, conv_w, conv_state):
+    """xbc: (B, S, C); conv_w: (W, C); conv_state: (B, W-1, C) prior inputs."""
+    W = conv_w.shape[0]
+    ext = jnp.concatenate([conv_state, xbc], axis=1)     # (B, S+W-1, C)
+    out = sum(ext[:, i:i + xbc.shape[1], :] * conv_w[i] for i in range(W))
+    new_state = ext[:, -(W - 1):, :] if W > 1 else conv_state
+    return jax.nn.silu(out), new_state
+
+
+def init_mamba_state(cfg, batch, dtype):
+    d_inner, H, N = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, H, HEAD_DIM, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_inner + 2 * N), dtype),
+    }
+
+
+def _project(p, cfg, u):
+    d_inner, H, N = _dims(cfg)
+    zxbcdt = dense(p["w_in"], u)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:2 * d_inner + 2 * N]
+    dt = zxbcdt[..., 2 * d_inner + 2 * N:]
+    return z, xbc, dt
+
+
+def mamba2_fwd(p, cfg, u, state):
+    """Full-sequence forward. u: (B, S, d)."""
+    B, S, d = u.shape
+    d_inner, H, N = _dims(cfg)
+    z, xbc, dt = _project(p, cfg, u)
+    xbc, conv_state = _causal_conv(xbc, p["conv"], state["conv"])
+    x = xbc[..., :d_inner].reshape(B, S, H, HEAD_DIM)
+    Bm = xbc[..., d_inner:d_inner + N]
+    Cm = xbc[..., d_inner + N:]
+
+    A = -jnp.exp(p["A_log"])                              # (H,) negative
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = jnp.exp(dt_s * A)                                 # decay in (0,1)
+    xdt = x.astype(jnp.float32) * dt_s[..., None]         # dt-scaled input
+
+    def step(h, inp):
+        a_t, x_t, B_t, C_t = inp       # (B,H) (B,H,P) (B,N) (B,N)
+        h = a_t[..., None, None] * h + x_t[..., :, None] * B_t[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y
+
+    # chunked scan with per-chunk remat: backward memory O(S/chunk) states
+    CH = 64
+    pad = (-S) % CH
+    def prep(x_, neutral=0.0):
+        x_ = jnp.moveaxis(x_, 1, 0)
+        if pad:
+            x_ = jnp.pad(x_, ((0, pad),) + ((0, 0),) * (x_.ndim - 1),
+                         constant_values=neutral)
+        return x_.reshape((S + pad) // CH, CH, *x_.shape[1:])
+    a_c = prep(a, neutral=1.0)         # padded steps: decay 1, input 0
+    x_c = prep(xdt)
+    B_c = prep(Bm.astype(jnp.float32))
+    C_c = prep(Cm.astype(jnp.float32))
+
+    @jax.checkpoint
+    def chunk_step(h, inp):
+        return jax.lax.scan(step, h, inp)
+
+    h_new, ys = jax.lax.scan(chunk_step, state["ssm"], (a_c, x_c, B_c, C_c))
+    ys = ys.reshape(S + pad, B, H, HEAD_DIM)[:S]
+    y = jnp.moveaxis(ys, 0, 1)                            # (B,S,H,P)
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(u.dtype)
+    y = rmsnorm({"g": p["norm_g"]}, y) * jax.nn.silu(z)
+    out = dense(p["w_out"], y)
+    return out, dict(state, ssm=h_new, conv=conv_state)
+
+
+def mamba2_step(p, cfg, u, state):
+    """Single-token decode. u: (B, d)."""
+    B, d = u.shape
+    d_inner, H, N = _dims(cfg)
+    z, xbc, dt = _project(p, cfg, u)
+    # conv over ring of last W-1 inputs
+    W = cfg.conv_width
+    ext = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # (B,W,C)
+    xbc_t = jax.nn.silu(jnp.sum(ext * p["conv"][None], axis=1))      # (B,C)
+    new_conv = ext[:, 1:, :]
+    x = xbc_t[..., :d_inner].reshape(B, H, HEAD_DIM)
+    Bm = xbc_t[..., d_inner:d_inner + N].astype(jnp.float32)
+    Cm = xbc_t[..., d_inner + N:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,H)
+    a = jnp.exp(dt_s * A)
+    xdt = x.astype(jnp.float32) * dt_s[..., None]
+    h = a[..., None, None] * state["ssm"] + xdt[..., :, None] * Bm[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm)
+    y = y + p["D"][None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B, d_inner).astype(u.dtype)
+    y = rmsnorm({"g": p["norm_g"]}, y) * jax.nn.silu(z)
+    out = dense(p["w_out"], y)
+    return out, dict(state, ssm=h, conv=new_conv)

@@ -1,0 +1,155 @@
+"""Mixture-of-Experts layer (GShard-style top-k dispatch with capacity).
+
+Dispatch/combine are expressed as one-hot einsums so that GSPMD turns the
+(token-sharded x expert-sharded) contraction into all-to-all traffic when
+experts live on the "model" mesh axis — the communication pattern real
+expert-parallel systems exhibit, visible to the roofline pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, uniform_init
+
+
+def moe_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    scale = (1.0 / d) ** 0.5
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "w_in": uniform_init(ks[1], (E, d, f), scale, dtype),
+        "w_gate": uniform_init(ks[2], (E, d, f), scale, dtype),
+        "w_out": uniform_init(ks[3], (E, f, d), (1.0 / f) ** 0.5, dtype),
+    }
+    return p
+
+
+def _capacity(tokens: int, cfg) -> int:
+    cap = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, ((cap + 7) // 8) * 8)   # pad to multiple of 8
+
+
+def _dispatch_combine(xt, probs, cfg):
+    """Capacity-based one-hot dispatch for a token group.
+
+    xt: (T, d); probs: (T, E). Returns (out (T, d) f32-accumulated, aux).
+    FLOPs of the dispatch/combine einsums are T*E*C*d with C = the group
+    capacity — linear in T when called per fixed-size group, QUADRATIC in
+    T when called once globally (C grows with T). See EXPERIMENTS §Perf.
+    """
+    T, d = xt.shape
+    E, K = cfg.num_experts, cfg.top_k
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)               # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    C = _capacity(T, cfg)
+    # position of each (token, k) within its expert's buffer
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)       # (T, K, E)
+    # priority: k=0 assignments first, then token order
+    flat = onehot.transpose(1, 0, 2).reshape(K * T, E)            # (K*T, E)
+    pos_in_expert = jnp.cumsum(flat, axis=0) - flat               # (K*T, E)
+    pos = pos_in_expert.reshape(K, T, E).transpose(1, 0, 2)       # (T, K, E)
+    pos = jnp.sum(pos * onehot, axis=-1)                          # (T, K)
+    keep = pos < C                                                # capacity drop
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # dispatch tensor: (T, E, C) one-hot weights
+    disp = (jax.nn.one_hot(expert_idx, E, dtype=xt.dtype)[..., None]
+            * jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                             dtype=xt.dtype)[..., :C][:, :, None, :])
+    disp = jnp.sum(disp, axis=1)                                  # (T, E, C)
+    comb = jnp.sum(
+        jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                         dtype=jnp.float32)[..., :C][:, :, None, :]
+        * gate_vals[..., None, None].astype(jnp.float32),
+        axis=1)                                                   # (T, E, C)
+    return disp, comb
+
+
+def _expert_ffn(p, xe):
+    h = jnp.einsum("...ecd,edf->...ecf", xe, p["w_in"])
+    g = jnp.einsum("...ecd,edf->...ecf", xe, p["w_gate"])
+    return jnp.einsum("...ecf,efd->...ecd", jax.nn.silu(g) * h, p["w_out"])
+
+
+def moe_apply(p, cfg, x):
+    """x: (B, S, d) -> (B, S, d), plus aux load-balancing loss (scalar)."""
+    B, S, d = x.shape
+    E = cfg.num_experts
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]["w"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    Gsz = cfg.moe_group_size
+    if Gsz and T > Gsz and T % Gsz == 0:
+        # blocked dispatch: fixed per-group capacity -> linear-in-T FLOPs.
+        # The expert/capacity dims are constrained onto mesh axes so the
+        # dispatch/combine einsums shard instead of computing redundantly
+        # on every model shard (16x waste otherwise; §Perf H1-it4/it5):
+        #   factorized mesh: E on "expert", C on "etp" (textbook EP+TP);
+        #   E % model == 0:  E on "model" (pure expert parallel);
+        #   otherwise:       C on "model" (capacity parallel).
+        from repro.sharding.ctx import constrain, mesh_axis_names
+        axes = mesh_axis_names()
+        if "expert" in axes:
+            d_ax, c_ax = (None, None, "expert", "etp"), \
+                         (None, "expert", "etp", None)
+        elif E % 16 == 0:
+            d_ax, c_ax = (None, None, "model", None), \
+                         (None, "model", None, None)
+        else:
+            d_ax, c_ax = (None, None, None, "model"), \
+                         (None, None, "model", None)
+        G = T // Gsz
+        xg = xt.reshape(G, Gsz, d)
+        pg = probs.reshape(G, Gsz, E)
+        disp, comb = jax.vmap(lambda xx, pp: _dispatch_combine(xx, pp, cfg))(
+            xg, pg)                                               # (G,Tb,E,C)
+        disp = constrain(disp, *d_ax)
+        comb = constrain(comb, *d_ax)
+        xe = jnp.einsum("gtd,gtec->gecd", xg, disp)               # (G,E,C,d)
+        xe = constrain(xe, *c_ax)
+        ye = _expert_ffn(p, xe)
+        ye = constrain(ye, *c_ax)
+        out = jnp.einsum("gecd,gtec->gtd", ye.astype(jnp.float32), comb)
+        out = out.reshape(T, d)
+    else:
+        disp, comb = _dispatch_combine(xt, probs, cfg)
+        xe = jnp.einsum("td,tec->ecd", xt, disp)                  # (E, C, d)
+        ye = _expert_ffn(p, xe)
+        out = jnp.einsum("ecd,tec->td", ye.astype(jnp.float32), comb)
+
+    # aux loss (Switch-style load balance)
+    _, expert_idx = jax.lax.top_k(probs, cfg.top_k)
+    me = jnp.mean(probs, axis=0)                                  # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32),
+                  axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def moe_apply_dense(p, cfg, x):
+    """Decode-path MoE: tiny token count, dense gather is cheaper than
+    capacity dispatch. x: (B, 1, d)."""
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    logits = xt.astype(jnp.float32) @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)       # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    w = jnp.sum(jax.nn.one_hot(expert_idx, cfg.num_experts,
+                               dtype=jnp.float32)
+                * gate_vals[..., None], axis=1)                   # (T, E)
+    h = jnp.einsum("td,edf->tef", xt, p["w_in"])
+    g = jnp.einsum("td,edf->tef", xt, p["w_gate"])
+    y = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * h, p["w_out"])
+    out = jnp.einsum("ted,te->td", y.astype(jnp.float32), w)
+    return out.reshape(B, S, d).astype(x.dtype), jnp.float32(0.0)

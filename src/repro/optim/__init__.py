@@ -1,0 +1,3 @@
+from repro.optim.sgd import sgd, apply_updates
+from repro.optim.adam import adam
+from repro.optim.masked import apply_mask, masked_update

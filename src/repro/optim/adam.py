@@ -1,0 +1,38 @@
+"""Adam / AdamW in pure JAX."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0):
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v
+                         + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(m, v, p=None):
+            step = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                step = step - lr * weight_decay * p.astype(jnp.float32)
+            return step
+
+        if weight_decay and params is not None:
+            updates = jax.tree.map(upd, m, v, params)
+        else:
+            updates = jax.tree.map(upd, m, v)
+        return updates, {"m": m, "v": v, "t": t}
+
+    return init, update

@@ -1,0 +1,19 @@
+"""Gradient masking utilities (FES, Eq. 3: frozen feature extractor)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_mask(grads, mask):
+    """Zero grads where mask is False. mask mirrors grads' structure."""
+    return jax.tree.map(
+        lambda g, m: g * jnp.asarray(m, g.dtype), grads, mask)
+
+
+def masked_update(grads, mask, limited):
+    """Per-cohort dynamic FES: if ``limited`` (traced bool), keep only
+    classifier grads; else keep all."""
+    return jax.tree.map(
+        lambda g, m: jnp.where(limited, g * jnp.asarray(m, g.dtype), g),
+        grads, mask)

@@ -1,0 +1,25 @@
+"""SGD (optionally with momentum). Minimal optax-like (init, update) pair."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd(lr: float, momentum: float = 0.0):
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        del params
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g, grads), state
+        new_m = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+        return jax.tree.map(lambda m: -lr * m, new_m), new_m
+
+    return init, update
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)

@@ -1,0 +1,49 @@
+"""Mesh-context-aware sharding constraints.
+
+Model code is mesh-agnostic; ``constrain`` applies a
+with_sharding_constraint only when a mesh with the named axes is active
+and every named dim divides its axis — otherwise it is a no-op (CPU
+tests, reduced configs)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _active_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and m.axis_names:
+            return m
+    except Exception:
+        pass
+    try:  # `with mesh:` context managers set the thread-resources env
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        if m is not None and m.axis_names:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def mesh_axis_names() -> tuple:
+    m = _active_mesh()
+    return tuple(m.axis_names) if m is not None else ()
+
+
+def constrain(x, *axes):
+    """axes: one entry per dim of x — mesh axis name or None."""
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    fixed = []
+    for ax, dim in zip(axes, x.shape):
+        if ax is None or ax not in mesh.axis_names:
+            fixed.append(None)
+            continue
+        size = mesh.shape[ax]
+        fixed.append(ax if size and dim % size == 0 else None)
+    if not any(fixed):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*fixed))

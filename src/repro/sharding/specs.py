@@ -1,0 +1,209 @@
+"""PartitionSpec derivation for every param/input leaf.
+
+Two mesh contexts:
+  * TRAIN (federated round): axes ("client", "dsub", "model") — client
+    cohorts x FSDP x tensor-parallel. Global params have no client axis
+    (replicated across cohorts until the broadcast inside the round).
+  * SERVE: axes ("data", "model") — batch x tensor-parallel
+    (+ optional 2-D weight sharding for >=100B archs: second weight dim
+    on "data").
+
+Rules are by param role (path name + ndim); any mesh axis that does not
+divide the dim is dropped (validated against the actual mesh), so the same
+rules serve reduced smoke configs and the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return out
+
+
+def _fit(spec_axes, shape, mesh):
+    """Drop axes that don't divide the corresponding dim (tuple axes =
+    sharding over the product of mesh axes)."""
+    fixed = []
+    for ax, dim in zip(spec_axes, shape):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if not axes or dim % size != 0:
+            fixed.append(None)
+        elif len(axes) == 1:
+            fixed.append(axes[0])
+        else:
+            fixed.append(axes)
+    return P(*fixed)
+
+
+# --------------------------------------------------------- param rules -----
+
+def _param_axes(names: list[str], ndim: int, cfg, *, fsdp, tp):
+    """Returns a per-dim axis list for the *unstacked* param shape."""
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    ctx = set(names)
+
+    # --- embeddings / head
+    if "embed" in ctx and name == "table":
+        return [tp, fsdp]
+    if parent == "lm_head" and name == "w":
+        return [fsdp, tp]
+    if parent == "vision_proj" and name == "w":
+        return [fsdp, tp]
+    if name == "enc_pos":
+        return [None, None]
+
+    # --- MoE experts (E, d, f) / (E, f, d); router replicated.
+    # Three regimes (§Perf H1):
+    #  * factorized mesh ("expert","etp"): E on "expert", f on "etp" —
+    #    the textbook expert-parallel + within-expert-TP layout;
+    #  * E divides the model axis: pure expert-parallel on "model";
+    #  * otherwise: TP within each expert (f on "model") — leaving E
+    #    unsharded with nothing on "model" makes GSPMD compute every
+    #    expert FFN redundantly on all model shards (9x waste).
+    if parent == "moe" or "moe" in ctx:
+        factorized = tp == ("expert", "etp")
+        if factorized:
+            if name in ("w_in", "w_gate") and ndim >= 3:
+                return ["expert", fsdp, "etp"]
+            if name == "w_out" and ndim >= 3:
+                return ["expert", "etp", fsdp]
+            return [None] * ndim
+        ep = bool(cfg.num_experts) and cfg.num_experts % 16 == 0
+        if name in ("w_in", "w_gate") and ndim >= 3:
+            return [tp, fsdp, None] if ep else [None, fsdp, tp]
+        if name == "w_out" and ndim >= 3:
+            return [tp, None, fsdp] if ep else [None, tp, fsdp]
+        return [None] * ndim
+
+    # --- attention projections
+    if name in ("wq", "wk", "wv", "wg", "wr") or (
+            parent in ("wq", "wk", "wv", "wg", "wr") and name in ("w", "b")):
+        if name == "b" or ndim == 1:
+            return [tp]
+        return [fsdp, tp]
+    if name == "wo" or (parent == "wo" and name == "w"):
+        if ndim == 1:
+            return [None]
+        return [tp, fsdp]
+
+    # --- MLP
+    if name in ("w_in", "w_gate", "ck") or (
+            parent in ("w_in", "w_gate", "ck") and name == "w"):
+        return [fsdp, tp] if ndim == 2 else [tp]
+    if name in ("w_out", "cv") or (parent in ("w_out", "cv") and name == "w"):
+        return [tp, fsdp] if ndim == 2 else [None]
+    if name == "cr" or (parent == "cr" and name == "w"):
+        return [fsdp, tp] if ndim == 2 else [tp]
+
+    # --- rwkv decay lora / mamba
+    if name in ("wA",) or (parent == "wA" and name == "w"):
+        return [fsdp, None] if ndim == 2 else [None]
+    if name in ("wB",) or (parent == "wB" and name == "w"):
+        return [None, tp] if ndim == 2 else [tp]
+    if name == "conv":
+        return [None, tp]
+
+    # --- everything else (norms, scalars, biases, cnn) replicated
+    return [None] * ndim
+
+
+STACKED_PREFIXES = ("body", "tail", "encoder")
+
+
+def param_spec(path, leaf, cfg, mesh, *, train: bool):
+    names = _path_names(path)
+    ndim = leaf.ndim
+    stacked = 1 if (names and names[0] in STACKED_PREFIXES) else 0
+    # factorized expert mesh: dense params shard over the whole
+    # ("expert","etp") tuple == the model axis
+    tp = ("expert", "etp") if "expert" in mesh.axis_names else "model"
+    if train:
+        fsdp = "dsub" if cfg.train_fsdp else None
+    else:
+        fsdp = "data" if cfg.serve_2d else None
+    axes = _param_axes(names, ndim - stacked, cfg, fsdp=fsdp, tp=tp)
+    axes = [None] * stacked + axes
+    if len(axes) != ndim:           # defensive: replicate on rule mismatch
+        axes = [None] * ndim
+    return _fit(axes, leaf.shape, mesh)
+
+
+def params_shardings(params_like, cfg, mesh, *, train: bool,
+                     extra_leading: int = 0):
+    """NamedShardings for a param tree; extra_leading prepends replicated
+    dims (e.g. the async queue's ring axis)."""
+    def one(path, leaf):
+        sp = param_spec(path, leaf, cfg, mesh, train=train)
+        if extra_leading:
+            sp = P(*([None] * extra_leading + list(sp)))
+        return NamedSharding(mesh, sp)
+    return jax.tree_util.tree_map_with_path(one, params_like)
+
+
+# --------------------------------------------------------- input rules -----
+
+def batch_shardings(batch_like, mesh, *, train: bool):
+    """train batches: (C, steps, b, ...) -> client x dsub.
+    serve batches:    (B, ...)          -> data."""
+    def one(path, leaf):
+        if train:
+            axes = ["client", None, "dsub"] + [None] * (leaf.ndim - 3)
+        else:
+            axes = ["data"] + [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, _fit(axes[: leaf.ndim], leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, batch_like)
+
+
+def sched_shardings(sched_like, mesh):
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, _fit(["client"], x.shape, mesh)),
+        sched_like)
+
+
+def cache_shardings(cache_like, cfg, mesh):
+    """Decode cache: shard batch dim on "data", trailing feature dims on
+    "model" where divisible. Layer-stacked leading dims replicated.
+
+    Leaf shapes seen here:
+      kv cache  (L, B, S, KH, hd)   pos (L, B, S)
+      rwkv wkv  (L, B, H, hd, hd)   x_tm/x_cm (L, B, d)
+      mamba ssm (L, B, H, P, N)     conv (L, B, W-1, C)
+      cross-kv  (L, B, Se, KH, hd)
+    """
+    tp = ("expert", "etp") if "expert" in mesh.axis_names else "model"
+
+    def one(path, leaf):
+        names = _path_names(path)
+        nd = leaf.ndim
+        axes = [None] * nd
+        if nd >= 2:
+            axes[1] = "data"                       # batch dim
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            last = names[-1] if names else ""
+            if nd >= 5:                            # (L,B,S,KH,hd)-likes
+                axes[-1] = tp
+            elif nd >= 3 and last in ("x_tm", "x_cm", "conv"):
+                axes[-1] = tp
+        return NamedSharding(mesh, _fit(axes, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, cache_like)
+
+
+def replicated(tree_like, mesh):
+    return jax.tree.map(lambda x: NamedSharding(mesh, P()), tree_like)

@@ -1,0 +1,102 @@
+"""HLO post-processing for the roofline analysis.
+
+Parses the optimized HLO text of a compiled executable and sums the operand
+bytes of every cross-device collective. ``cost_analysis()`` reports FLOPs and
+HBM bytes but NOT collective traffic, so this is the third roofline term.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g.  bf16[16,4096,512]{2,1,0}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)   # op kind -> #ops
+    bytes_: dict = field(default_factory=dict)   # op kind -> total output bytes
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.counts.values())
+
+    def summary(self) -> str:
+        parts = [
+            f"{k}: n={self.counts[k]} bytes={self.bytes_[k]:,}"
+            for k in sorted(self.counts)
+        ]
+        return "; ".join(parts) if parts else "none"
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective op in an HLO module.
+
+    HLO lines look like::
+
+        %ag = bf16[512,4096]{1,0} all-gather(%p), replica_groups=...
+
+    We take the *result* shape (left of '='), which for all-gather is the
+    gathered size (upper bound on the wire traffic per participant ring) and
+    for all-reduce equals the tensor size (ring all-reduce moves ~2x, we keep
+    the raw tensor size and note the convention in EXPERIMENTS.md).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match "  %name = <shape(s)> <op>(" ; op may be e.g. all-reduce-start
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([a-z0-9\-]+)\(", s)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        kind = None
+        for c in COLLECTIVE_OPS:
+            if op == c or op.startswith(c + "-"):  # -start/-done variants
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # avoid double counting start/done pairs
+        b = _shape_bytes(shape_str)
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+        stats.bytes_[kind] = stats.bytes_.get(kind, 0) + b
+    return stats
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

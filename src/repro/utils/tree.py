@@ -1,0 +1,84 @@
+"""Pytree utilities used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_lerp(a, b, w):
+    """(1 - w) * a + w * b, leafwise (w may be a traced scalar)."""
+    return jax.tree.map(lambda ai, bi: (1.0 - w) * ai + w * bi, a, b)
+
+
+def tree_weighted_sum(trees, weights):
+    """sum_k weights[k] * trees[k]; trees is a list of like pytrees."""
+    out = tree_scale(trees[0], weights[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = jax.tree.map(lambda o, x, w=w: o + w * x, out, t)
+    return out
+
+
+def tree_select(pred, a, b):
+    """where(pred, a, b) leafwise; pred is a scalar bool (traced ok)."""
+    return jax.tree.map(lambda ai, bi: jnp.where(pred, ai, bi), a, b)
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def tree_l2sq(tree) -> jax.Array:
+    """Sum of squared L2 norms over all leaves (scalar)."""
+    leaves = jax.tree.leaves(tree)
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+
+
+def tree_allfinite(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    ok = jnp.array(True)
+    for x in leaves:
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(x)))
+    return ok
+
+
+def tree_stack(trees):
+    """Stack a list of like pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree, n: int):
+    return [jax.tree.map(lambda x, i=i: x[i], tree) for i in range(n)]

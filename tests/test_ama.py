@@ -1,0 +1,92 @@
+"""AMA (paper Eq. 5) unit tests + convex-combination properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FLConfig
+from repro.core.ama import (alpha_schedule, ama_aggregate, ama_mix,
+                            fedavg_aggregate, normalize_weights,
+                            weighted_client_sum)
+
+
+def tiny_tree(rng, C=None):
+    shape = lambda *s: jnp.asarray(rng.randn(*s), jnp.float32)
+    if C is None:
+        return {"a": shape(3, 4), "b": {"c": shape(5)}}
+    return {"a": shape(C, 3, 4), "b": {"c": shape(C, 5)}}
+
+
+def test_alpha_schedule_matches_paper():
+    fl = FLConfig(alpha0=0.1, eta=2.5e-3)
+    assert np.isclose(float(alpha_schedule(fl, 0)), 0.1)
+    assert np.isclose(float(alpha_schedule(fl, 100)), 0.35)
+    # capped
+    assert float(alpha_schedule(fl, 10_000)) == pytest.approx(fl.alpha_cap)
+
+
+def test_ama_aggregate_hand_computed():
+    rng = np.random.RandomState(0)
+    fl = FLConfig(alpha0=0.2, eta=0.0)
+    prev = tiny_tree(rng)
+    clients = tiny_tree(rng, C=3)
+    sizes = jnp.asarray([1.0, 2.0, 1.0])
+    out = ama_aggregate(fl, 0, prev, clients, sizes)
+    w = np.array([0.25, 0.5, 0.25])
+    for key in ("a",):
+        want = 0.2 * np.asarray(prev[key]) + 0.8 * np.einsum(
+            "c...,c->...", np.asarray(clients[key]), w)
+        np.testing.assert_allclose(np.asarray(out[key]), want, rtol=1e-5)
+
+
+def test_all_delayed_falls_back_to_prev():
+    rng = np.random.RandomState(1)
+    fl = FLConfig(alpha0=0.3, eta=0.0)
+    prev = tiny_tree(rng)
+    clients = tiny_tree(rng, C=2)
+    on_time = jnp.zeros((2,), bool)
+    out = ama_aggregate(fl, 0, prev, clients, jnp.ones((2,)), on_time)
+    for k, v in jax.tree_util.tree_leaves_with_path(out):
+        pass
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(prev["a"]),
+                               rtol=1e-5)
+
+
+def test_fedavg_drops_excluded_clients():
+    rng = np.random.RandomState(2)
+    prev = tiny_tree(rng)
+    clients = tiny_tree(rng, C=3)
+    keep = jnp.asarray([True, False, True])
+    out = fedavg_aggregate(prev, clients, jnp.asarray([1.0, 5.0, 3.0]), keep)
+    w = np.array([0.25, 0.0, 0.75])
+    want = np.einsum("c...,c->...", np.asarray(clients["a"]), w)
+    np.testing.assert_allclose(np.asarray(out["a"]), want, rtol=1e-5)
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.floats(0.01, 0.5), st.floats(0.0, 0.01), st.integers(0, 400))
+def test_alpha_beta_convex(alpha0, eta, t):
+    fl = FLConfig(alpha0=alpha0, eta=eta)
+    a = float(alpha_schedule(fl, t))
+    assert 0.0 < a <= fl.alpha_cap + 1e-6
+    assert 0.0 <= 1.0 - a < 1.0
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.lists(st.floats(0.5, 100.0), min_size=1, max_size=8))
+def test_normalized_weights_sum_to_one(sizes):
+    w, tot = normalize_weights(jnp.asarray(sizes),
+                               jnp.ones((len(sizes),), bool))
+    assert np.isclose(float(jnp.sum(w)), 1.0, atol=1e-5)
+
+
+def test_ama_mix_kernel_path_matches_jnp():
+    rng = np.random.RandomState(3)
+    prev = tiny_tree(rng)
+    agg = tiny_tree(rng)
+    a = jnp.float32(0.37)
+    base = ama_mix(prev, agg, a, use_kernel=False)
+    kern = ama_mix(prev, agg, a, use_kernel=True)
+    for b, k in zip(jax.tree.leaves(base), jax.tree.leaves(kern)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(k), rtol=1e-5)

@@ -1,0 +1,66 @@
+"""Data substrate: synthetic sets + non-iid partition properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.partition import (dirichlet_partition, iid_partition,
+                                  shard_partition)
+from repro.data.pipeline import ClientDataset, build_clients
+from repro.data.synth import make_image_classification, make_lm_tokens
+
+
+def test_synth_images_shapes_and_classes():
+    train, test = make_image_classification(n_train=500, n_test=100)
+    assert train["image"].shape == (500, 28, 28, 1)
+    assert set(np.unique(train["label"])) <= set(range(10))
+    # classes are distinguishable: per-class means differ
+    m0 = train["image"][train["label"] == 0].mean(0)
+    m1 = train["image"][train["label"] == 1].mean(0)
+    assert np.abs(m0 - m1).mean() > 0.05
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(5, 30), st.integers(200, 800))
+def test_shard_partition_two_class_property(num_clients, n):
+    """The paper's non-iid setting: every client sees at most 2 classes
+    (feasible regime: 2*num_clients >= n_classes, like the paper's K=50)."""
+    rng = np.random.RandomState(0)
+    labels = rng.randint(0, 10, n)
+    parts = shard_partition(labels, num_clients)
+    all_idx = np.concatenate([p for p in parts if len(p)])
+    assert len(all_idx) == n and len(set(all_idx.tolist())) == n  # exact cover
+    for idx in parts:
+        assert len(np.unique(labels[idx])) <= 2
+
+
+def test_shard_partition_degenerate_still_exact_cover():
+    """With fewer slots than classes, cover beats the 2-class property."""
+    rng = np.random.RandomState(0)
+    labels = rng.randint(0, 10, 200)
+    parts = shard_partition(labels, num_clients=2)
+    all_idx = np.concatenate([p for p in parts if len(p)])
+    assert sorted(all_idx.tolist()) == list(range(200))
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(2, 20))
+def test_dirichlet_partition_is_exact_cover(num_clients):
+    rng = np.random.RandomState(1)
+    labels = rng.randint(0, 10, 400)
+    parts = dirichlet_partition(labels, num_clients, alpha=0.5)
+    all_idx = np.concatenate([p for p in parts if len(p)])
+    assert sorted(all_idx.tolist()) == list(range(400))
+
+
+def test_client_sampling_shapes():
+    train, _ = make_image_classification(n_train=300, n_test=50)
+    clients = build_clients(train, iid_partition(300, 10))
+    rng = np.random.RandomState(0)
+    out = clients[0].sample_steps(rng, steps=5, batch_size=8)
+    assert out["image"].shape == (5, 8, 28, 28, 1)
+    assert out["label"].shape == (5, 8)
+
+
+def test_lm_tokens_topics():
+    d = make_lm_tokens(n_seqs=12, seq_len=64, vocab=512, n_topics=4)
+    assert d["tokens"].shape == (12, 64)
+    assert d["tokens"].max() < 512

@@ -1,0 +1,54 @@
+"""Dry-run machinery on a small (2x4) fake mesh in a subprocess (the env
+var must be set before jax initialises, so this cannot run in-process)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    import numpy as np
+    from repro.configs.base import SHAPES, ShapeConfig, reduced, FLConfig
+    from repro.configs.registry import get_arch
+    from repro.launch import dryrun
+    from repro.launch.mesh import fl_view, serve_view
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    shape = ShapeConfig("t", 64, 8, "train")
+    fl = FLConfig(cohorts=2, local_steps=2, algorithm="ama_fes")
+    results = {}
+    for arch in ["minitron-8b", "zamba2-1.2b"]:
+        cfg = reduced(get_arch(arch)).with_(num_layers=3, fes_tail_layers=1)
+        low = dryrun.train_lowering(cfg, shape, mesh, fl)
+        comp = low.compile()
+        rec = dryrun.analyse(low, comp)
+        results[arch] = rec["hlo_flops"]
+    sshape = ShapeConfig("d", 64, 8, "decode")
+    cfg = reduced(get_arch("minitron-8b")).with_(num_layers=3,
+                                                 fes_tail_layers=1)
+    from repro.models.api import build_model, input_specs
+    low = dryrun.decode_lowering(cfg, sshape, mesh)
+    low.compile()
+    results["decode_ok"] = 1
+    print("RESULT " + json.dumps(results))
+""")
+
+
+def test_small_mesh_dryrun():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=480)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, out.stdout
+    res = json.loads(line[0][len("RESULT "):])
+    assert res["decode_ok"] == 1
+    assert res["minitron-8b"] > 0

@@ -1,0 +1,70 @@
+"""FES (paper Eqs. 2-3): classifier/feature-extractor split + freezing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig, reduced
+from repro.configs.registry import ARCHS
+from repro.core import fes
+from repro.core.client import make_fes_local_train, make_local_train
+from repro.models.api import build_model
+
+
+def _cnn_setup():
+    cfg = ARCHS["paper-cnn"]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    batch = {"image": jnp.asarray(rng.randn(1, 2, 8, 28, 28, 1), jnp.float32),
+             "label": jnp.asarray(rng.randint(0, 10, (1, 2, 8)), jnp.int32)}
+    return cfg, model, params, batch
+
+
+def test_split_matches_paper_cnn():
+    """Paper: classifier = the three FC layers; extractor = the convs."""
+    _, model, params, _ = _cnn_setup()
+    clf, body = fes.split_params(params)
+    assert set(clf) == {"fc1", "fc2", "fc3"}
+    assert set(body) == {"body"}
+
+
+def test_limited_client_keeps_feature_extractor_frozen():
+    """Dynamic-mask mode: a limited client's conv weights are bit-identical
+    after local training; an unlimited client's are not."""
+    cfg, model, params, batch = _cnn_setup()
+    fl = FLConfig(algorithm="ama_fes", lr=0.1)
+    lt = jax.jit(make_local_train(model, fl))
+    for limited, expect_frozen in [(True, True), (False, False)]:
+        out, _ = lt(params, batch, jnp.asarray([limited]))
+        conv_new = np.asarray(out["body"]["conv1"]["w"][0])
+        conv_old = np.asarray(params["body"]["conv1"]["w"])
+        same = np.array_equal(conv_new, conv_old)
+        assert same == expect_frozen
+        fc_new = np.asarray(out["fc3"]["w"][0])
+        assert not np.array_equal(fc_new, np.asarray(params["fc3"]["w"]))
+
+
+def test_static_fes_equals_masked_fes():
+    """The static (classifier-only-grad) path and the dynamic masked path
+    must produce identical classifiers."""
+    cfg, model, params, batch = _cnn_setup()
+    fl = FLConfig(algorithm="ama_fes", lr=0.1)
+    dyn, _ = jax.jit(make_local_train(model, fl))(
+        params, batch, jnp.asarray([True]))
+    stat, _ = jax.jit(make_fes_local_train(model, fl))(params, batch)
+    for a, b in zip(jax.tree.leaves(dyn), jax.tree.leaves(stat)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_fes_mask_covers_transformer_tail():
+    cfg = reduced(ARCHS["minitron-8b"])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mask = model.fes_mask(params)
+    assert all(jax.tree.leaves(mask["tail"]))
+    assert all(jax.tree.leaves(mask["lm_head"]))
+    assert not any(jax.tree.leaves(mask["body"]))
+    assert not any(jax.tree.leaves(mask["embed"]))
+    train, total = fes.count_trainable(params, mask)
+    assert 0 < train < total
