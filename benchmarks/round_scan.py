@@ -1,0 +1,94 @@
+"""Round-engine throughput: fused N-round lax.scan vs per-round-jit loop.
+
+Measures the dispatch-overhead win of compiling the whole run into ONE
+XLA program (core.round.make_train_loop) against the seed's architecture
+of one jitted call per round: compile time once, then steady-state
+per-round wall time for both engines on the same reduced transformer
+and identical schedules. The python loop pays a host round-trip + jit
+dispatch every round; the scan pays neither.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig, reduced
+from repro.configs.registry import ARCHS
+from repro.core.round import init_state, make_round_step, make_train_loop
+from repro.core.scheduler import HeterogeneitySchedule
+from repro.models.api import build_model
+
+
+def _setup(rounds: int, C: int = 2, steps: int = 2, b: int = 2, S: int = 32):
+    cfg = reduced(ARCHS["minitron-8b"])
+    model = build_model(cfg)
+    fl = FLConfig(algorithm="ama_fes", cohorts=C, local_steps=steps, lr=0.05)
+    rng = np.random.RandomState(0)
+    batch = {"tokens": jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (C, steps, b, S)), jnp.int32)}
+    sb = HeterogeneitySchedule(
+        fl.with_(num_clients=C, clients_per_round=C)).batch(0, rounds)
+    scheds = {"limited": jnp.asarray(sb["limited"]),
+              "delayed": jnp.asarray(sb["delayed"]),
+              "delays": jnp.asarray(sb["delays"]),
+              "data_sizes": jnp.ones((rounds, C), jnp.float32)}
+    return model, fl, batch, scheds
+
+
+def run(quick: bool = True) -> dict:
+    rounds = 8 if quick else 32
+    model, fl, batch, scheds = _setup(rounds)
+
+    # --- baseline: one jitted call per round (seed architecture)
+    step = jax.jit(make_round_step(model, fl))
+    state = init_state(model, fl, jax.random.PRNGKey(0))
+    sched0 = jax.tree.map(lambda x: x[0], scheds)
+    t0 = time.time()
+    state, m = step(state, batch, sched0)
+    jax.block_until_ready(m)
+    loop_compile_s = time.time() - t0
+    t0 = time.time()
+    for r in range(1, rounds):
+        state, m = step(state, batch,
+                        jax.tree.map(lambda x, r=r: x[r], scheds))
+    jax.block_until_ready(m)
+    loop_per_round_ms = (time.time() - t0) / max(rounds - 1, 1) * 1e3
+
+    # --- fused scan: the whole run is one XLA program
+    loop_fn = make_train_loop(model, fl, donate=False)
+    state0 = init_state(model, fl, jax.random.PRNGKey(0))
+    t0 = time.time()
+    _, m = loop_fn(state0, batch, scheds)
+    jax.block_until_ready(m)
+    scan_first_s = time.time() - t0          # compile + rounds
+    t0 = time.time()
+    _, m = loop_fn(state0, batch, scheds)
+    jax.block_until_ready(m)
+    scan_per_round_ms = (time.time() - t0) / rounds * 1e3
+    scan_compile_s = scan_first_s - scan_per_round_ms * rounds / 1e3
+
+    rec = {"rounds": rounds,
+           "python_loop_per_round_ms": round(loop_per_round_ms, 2),
+           "scan_per_round_ms": round(scan_per_round_ms, 2),
+           "dispatch_overhead_ms": round(
+               loop_per_round_ms - scan_per_round_ms, 2),
+           "speedup": round(loop_per_round_ms
+                            / max(scan_per_round_ms, 1e-9), 2),
+           "python_loop_compile_s": round(loop_compile_s, 2),
+           "scan_compile_s": round(max(scan_compile_s, 0.0), 2)}
+    print(f"round_scan.python_loop_per_round_ms,"
+          f"{rec['python_loop_per_round_ms']},")
+    print(f"round_scan.scan_per_round_ms,{rec['scan_per_round_ms']},")
+    print(f"round_scan.speedup,{rec['speedup']},"
+          f"x over per-round jit ({rounds} rounds)")
+    print(f"round_scan.compile_s,{rec['scan_compile_s']},"
+          f"scan program (loop step: {rec['python_loop_compile_s']})")
+    return rec
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--full" not in sys.argv)

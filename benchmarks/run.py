@@ -28,6 +28,10 @@ def main() -> None:
     from benchmarks import kernels_bench
     kernels_bench.run(quick=quick)
 
+    print("# --- round engine: fused scan vs per-round jit ---")
+    from benchmarks import round_scan
+    round_scan.run(quick=quick)
+
     if full:
         print("# --- ablation: adaptive vs fixed alpha ---")
         from benchmarks import ablation_alpha

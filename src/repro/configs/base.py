@@ -112,10 +112,19 @@ class FLConfig:
     p_limited: float = 0.25        # ratio of computing-limited devices
     p_delay: float = 0.0           # prob. of transmission delay (0.3 / 0.7)
     max_delay: int = 0             # 5 / 10 / 15 rounds; 0 disables async path
-    # baselines: "ama_fes" | "fedavg" | "fedprox"
+    # server strategy name (see repro.core.strategies registry):
+    # "ama" (alias "ama_fes") | "async_ama" | "fedavg" | "fedprox" | "fedopt"
     algorithm: str = "ama_fes"
     fedprox_rho: float = 0.01
     fedprox_partial: float = 0.5   # fraction of local steps on limited devices
+    # fedopt (server-side Adam on the aggregated pseudo-gradient)
+    server_lr: float = 0.1
+    server_b1: float = 0.9
+    server_b2: float = 0.99
+    server_tau: float = 1e-3
+    # route every strategy's mix step through the fused Pallas ama_mix
+    # kernel (interpret-mode off-TPU; see repro.kernels.ops)
+    use_kernel: bool = False
     fes_static: bool = False       # ALL cohorts computing-limited: classifier-
                                    # only differentiation (the body backward is
                                    # never built — paper §III at pod scale)
@@ -124,6 +133,9 @@ class FLConfig:
     # pod-scale runs: #parallel client cohorts simulated in one jitted round
     cohorts: int = 4
     local_steps: int = 1           # grad steps per cohort per round (pod-scale)
+
+    def with_(self, **kw) -> "FLConfig":
+        return replace(self, **kw)
 
 
 def reduced(cfg: ModelConfig, **kw) -> ModelConfig:

@@ -70,7 +70,8 @@ def ama_aggregate(fl: FLConfig, t, prev_global, client_params, data_sizes,
     return ama_mix(prev_global, agg, alpha, use_kernel=use_kernel)
 
 
-def fedavg_aggregate(prev_global, client_params, data_sizes, on_time=None):
+def fedavg_aggregate(prev_global, client_params, data_sizes, on_time=None,
+                     *, use_kernel: bool = False):
     """Naive FL (paper's baseline): plain weighted average of on-time
     updates; falls back to the previous model if none arrived."""
     C = jax.tree.leaves(client_params)[0].shape[0]
@@ -78,5 +79,7 @@ def fedavg_aggregate(prev_global, client_params, data_sizes, on_time=None):
         on_time = jnp.ones((C,), bool)
     w, tot = normalize_weights(data_sizes, on_time)
     agg = weighted_client_sum(client_params, w)
-    return jax.tree.map(lambda a, p: jnp.where(tot > 0, a, p).astype(p.dtype),
-                        agg, prev_global)
+    agg = jax.tree.map(lambda a, p: jnp.where(tot > 0, a, p), agg, prev_global)
+    # a FedAvg round is the alpha=0 corner of the AMA mix: same fused
+    # kernel path serves it when use_kernel is on
+    return ama_mix(prev_global, agg, 0.0, use_kernel=use_kernel)

@@ -89,7 +89,8 @@ def pop_slot(queue, t):
 
 
 def async_ama_aggregate(fl: FLConfig, t, prev_global, client_params,
-                        data_sizes, on_time, queue):
+                        data_sizes, on_time, queue, *,
+                        use_kernel: bool = False):
     """One asynchronous AMA round (Eq. 6). Returns (new_global, new_queue).
 
     client_params are THIS round's local results; clients with
@@ -109,6 +110,19 @@ def async_ama_aggregate(fl: FLConfig, t, prev_global, client_params,
     agg = jax.tree.map(lambda a, p: jnp.where(tot > 0, a, p), agg, prev_global)
     # when no on-time arrivals, beta's budget reverts to the previous model
     # via the agg fallback above, preserving alpha+beta+gamma = 1.
+
+    if use_kernel:
+        # alpha*prev + beta*agg + gamma*stale is one fused K=2 mix.
+        # The jnp.stack stages an extra (2, N) f32 copy to fit the
+        # kernel's stacked-operand layout; a separate-ref kernel variant
+        # would avoid it (acceptable while use_kernel is opt-in).
+        from repro.kernels.ops import ama_mix_tree
+        stacked = jax.tree.map(
+            lambda a, s: jnp.stack([a.astype(jnp.float32), s]),
+            agg, stale_sum)
+        weights = jnp.stack([beta, gamma_scale])
+        new_global = ama_mix_tree(prev_global, stacked, alpha, weights)
+        return new_global, queue
 
     def mix(p, a, s):
         out = (alpha * p.astype(jnp.float32) + beta * a.astype(jnp.float32)

@@ -6,8 +6,10 @@ One engine serves both scales:
     axis; no cross-client collectives inside the local scan (this is the
     defining difference from data-parallel training).
 
-Algorithms: "ama_fes" (plain SGD + optional FES mask), "fedavg" (plain
-SGD), "fedprox" (proximal term: g += 2*rho*(omega - omega_0), Eq. 4).
+Algorithm behaviour is injected through the ServerStrategy client hooks
+(``local_grad_transform``, ``local_steps``) — the AMA family masks FES
+gradients, FedProx adds the proximal pull (Eq. 4) and runs partial work
+on limited devices; this module contains no per-algorithm branching.
 """
 from __future__ import annotations
 
@@ -16,41 +18,29 @@ import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
 from repro.core import fes as fes_lib
-from repro.optim.masked import masked_update
+from repro.core import strategies
 
 
-def make_local_train(model, fl: FLConfig):
+def make_local_train(model, fl: FLConfig, strategy=None):
     """Returns local_train(global_params, batches, limited) ->
     (client_params (C, ...), mean_loss (C,)).
 
     batches: pytree with leading (C, steps, batch, ...) axes.
     limited: (C,) bool — FES-limited cohorts (dynamic mask mode).
     """
+    strategy = strategy or strategies.resolve(fl)
     grad_fn = jax.value_and_grad(model.loss)
 
     def one_client(params0, global_params, batches, limited):
         mask = model.fes_mask(params0)
         n_steps = jax.tree.leaves(batches)[0].shape[0]
-        # FedProx "partial work": limited devices run fewer local steps
-        if fl.algorithm == "fedprox":
-            n_active = jnp.where(
-                limited,
-                jnp.int32(max(1, int(fl.fedprox_partial * n_steps))),
-                jnp.int32(n_steps))
-        else:
-            n_active = jnp.int32(n_steps)
+        n_active = strategy.local_steps(n_steps, limited)
 
         def step(carry, mb):
             params, i = carry
             loss, g = grad_fn(params, mb)
-            if fl.algorithm == "fedprox":
-                g = jax.tree.map(
-                    lambda gi, p, p0: gi + 2.0 * fl.fedprox_rho
-                    * (p.astype(jnp.float32)
-                       - p0.astype(jnp.float32)).astype(gi.dtype),
-                    g, params, global_params)
-            if fl.algorithm == "ama_fes" and fl.fes_enabled:
-                g = masked_update(g, mask, limited)
+            g = strategy.local_grad_transform(g, params, global_params,
+                                              mask, limited)
             active = i < n_active
             new_params = jax.tree.map(
                 lambda p, gi: jnp.where(

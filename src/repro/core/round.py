@@ -1,93 +1,114 @@
-"""The jitted federated round — one XLA program per round (pod scale).
+"""The jitted federated round + the fused multi-round scan engine.
 
-This is the paper's Algorithm 1 as a single ``train_step`` suitable for
-pjit on the production mesh: C client cohorts train in parallel on the
-"client" mesh axis with NO cross-client collectives during local steps;
-the AMA aggregation (one weighted reduction over the client axis + mix
-with omega_{t-1}) is the only cross-cohort communication of the round —
-the paper's rare-global-aggregation pattern, TPU-native.
+``make_round_step`` is the paper's Algorithm 1 as a single ``train_step``
+suitable for pjit on the production mesh: C client cohorts train in
+parallel on the "client" mesh axis with NO cross-client collectives
+during local steps; the server aggregation (one weighted reduction over
+the client axis + the strategy's mix) is the only cross-cohort
+communication of the round — the paper's rare-global-aggregation
+pattern, TPU-native.
+
+``make_train_loop`` goes one step further: it rolls N rounds into one
+``jax.lax.scan`` over precomputed schedule arrays (see
+``HeterogeneitySchedule.batch``), so an entire run compiles to ONE XLA
+program — no per-round Python dispatch, no per-round host sync, and the
+state carry is donated so the global model is updated in place.
+
+All algorithm behaviour comes from the ServerStrategy registry
+(``repro.core.strategies``); this module contains no per-algorithm
+branching.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
-from repro.core import async_ama
-from repro.core.ama import ama_aggregate, fedavg_aggregate
+from repro.core import strategies
 from repro.core.client import make_fes_local_train, make_local_train
 
 
-def init_state(model, fl: FLConfig, key):
+def init_state(model, fl: FLConfig, key, strategy=None):
+    """Round-loop carry: global params, round index, strategy aux state
+    (async ring buffer, fedopt moments, ... — {} for stateless rules)."""
+    strategy = strategy or strategies.resolve(fl)
     params = model.init(key)
-    state = {"params": params, "t": jnp.zeros((), jnp.int32)}
-    if fl.max_delay > 0:
-        state["queue"] = async_ama.init_queue(fl, params)
-    return state
+    return {"params": params, "t": jnp.zeros((), jnp.int32),
+            "aux": strategy.init_state(params)}
 
 
-def make_round_step(model, fl: FLConfig):
+def make_round_step(model, fl: FLConfig, strategy=None):
     """Returns round_step(state, batch, sched) -> (state, metrics).
 
     batch: pytree with leading (C, steps, b, ...) axes.
     sched: {"limited","delayed","delays","data_sizes"} each (C,).
     """
+    strategy = strategy or strategies.resolve(fl)
     local_train = (make_fes_local_train(model, fl) if fl.fes_static
-                   else make_local_train(model, fl))
+                   else make_local_train(model, fl, strategy))
 
     def round_step(state, batch, sched):
         t = state["t"]
         prev_global = state["params"]
         client_params, losses = local_train(prev_global, batch,
                                             sched["limited"])
+        new_params, aux = strategy.aggregate(t, prev_global, client_params,
+                                             sched, state["aux"])
         on_time = jnp.logical_not(sched["delayed"])
-        new_state = dict(state, t=t + 1)
-
-        if fl.algorithm == "fedavg":
-            # naive FL: drop limited AND delayed clients, no mixing
-            keep = jnp.logical_and(on_time,
-                                   jnp.logical_not(sched["limited"]))
-            new_params = fedavg_aggregate(prev_global, client_params,
-                                          sched["data_sizes"], keep)
-        elif fl.algorithm == "fedprox":
-            # FedProx aggregates on-time clients, no mixing
-            new_params = fedavg_aggregate(prev_global, client_params,
-                                          sched["data_sizes"], on_time)
-        elif fl.max_delay > 0:
-            queue = async_ama.enqueue(fl, state["queue"], t, client_params,
-                                      sched["delayed"], sched["delays"])
-            new_params, queue = async_ama.async_ama_aggregate(
-                fl, t, prev_global, client_params, sched["data_sizes"],
-                on_time, queue)
-            new_state["queue"] = queue
-        else:
-            new_params = ama_aggregate(fl, t, prev_global, client_params,
-                                       sched["data_sizes"], on_time)
-
-        new_state["params"] = new_params
         metrics = {"loss": jnp.mean(losses),
                    "n_on_time": jnp.sum(on_time.astype(jnp.int32))}
-        return new_state, metrics
+        return {"params": new_params, "t": t + 1, "aux": aux}, metrics
 
     return round_step
 
 
-def make_train_step_for_lowering(model, fl: FLConfig):
-    """Flat-signature variant for .lower(): (params, [queue,] t, batch,
-    sched) -> same. Keeps the dry-run input_specs simple."""
-    round_step = make_round_step(model, fl)
+def make_train_loop(model, fl: FLConfig, strategy=None, *,
+                    per_round_batch: bool = False, donate: bool = True):
+    """Fused N-round engine: one XLA program for the whole run.
 
-    if fl.max_delay > 0:
-        def step(params, queue, t, batch, sched):
-            state = {"params": params, "queue": queue, "t": t}
+    Returns train_loop(state, batch, scheds) -> (state, metrics) where
+    ``scheds`` leaves carry a leading (n_rounds,) axis (the stacked
+    output of ``HeterogeneitySchedule.batch``) and metrics come back
+    stacked per round. With ``per_round_batch`` the batch pytree also
+    carries a leading (n_rounds,) axis (fresh data every round — the
+    correctness-equivalence configuration); without it the same batch is
+    re-fed each round (the throughput configuration — no O(N) input
+    staging). ``donate`` donates the state carry buffers to XLA so the
+    global model (and at LLM scale that is the whole HBM budget) is
+    updated in place; pass False when the caller needs the input state
+    afterwards.
+    """
+    round_step = make_round_step(model, fl, strategy)
+
+    def train_loop(state, batch, scheds):
+        if per_round_batch:
+            def body(st, xs):
+                b, sc = xs
+                return round_step(st, b, sc)
+            return jax.lax.scan(body, state, (batch, scheds))
+
+        def body(st, sc):
+            return round_step(st, batch, sc)
+        return jax.lax.scan(body, state, scheds)
+
+    return jax.jit(train_loop, donate_argnums=(0,) if donate else ())
+
+
+def make_train_step_for_lowering(model, fl: FLConfig):
+    """Flat-signature variant for .lower(): (params, [aux,] t, batch,
+    sched) -> same. Keeps the dry-run input_specs simple."""
+    strategy = strategies.resolve(fl)
+    round_step = make_round_step(model, fl, strategy)
+
+    if strategy.stateful:
+        def step(params, aux, t, batch, sched):
+            state = {"params": params, "t": t, "aux": aux}
             out, metrics = round_step(state, batch, sched)
-            return out["params"], out["queue"], metrics
+            return out["params"], out["aux"], metrics
         return step
 
     def step(params, t, batch, sched):
-        state = {"params": params, "t": t}
+        state = {"params": params, "t": t, "aux": {}}
         out, metrics = round_step(state, batch, sched)
         return out["params"], metrics
     return step

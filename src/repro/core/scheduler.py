@@ -33,7 +33,6 @@ class HeterogeneitySchedule:
         k = int(round(fl.p_limited * fl.num_clients))
         self.limited_set = set(
             rng.choice(fl.num_clients, size=k, replace=False).tolist())
-        self._rng = np.random.RandomState(fl.seed + 1)
 
     def round(self, t: int) -> RoundSchedule:
         fl = self.fl
@@ -50,3 +49,21 @@ class HeterogeneitySchedule:
             delays = np.ones(fl.clients_per_round, np.int32)
         delays = np.where(delayed, delays, 1).astype(np.int32)
         return RoundSchedule(sel, limited, delayed, delays)
+
+    def batch(self, t0: int, n_rounds: int) -> dict[str, np.ndarray]:
+        """Stacked (n_rounds, C) schedule arrays for the fused scan engine.
+
+        Row i is BIT-IDENTICAL to ``round(t0 + i)``: each round owns an
+        independent RNG stream keyed on its absolute index, so the
+        schedule of round t cannot depend on how (or whether) it was
+        batched — the contract the scan-vs-python-loop equivalence test
+        relies on. The per-round draws therefore cannot be collapsed
+        into one vectorised stream; the vectorisation is the output
+        layout (stacked arrays as scan data), produced from the one
+        authoritative ``round()`` implementation.
+        """
+        rows = [self.round(t0 + i) for i in range(n_rounds)]
+        return {"selected": np.stack([r.selected for r in rows]),
+                "limited": np.stack([r.limited for r in rows]),
+                "delayed": np.stack([r.delayed for r in rows]),
+                "delays": np.stack([r.delays for r in rows])}

@@ -2,8 +2,9 @@
 
 Drives the same jitted round engine as the pod path, but with the full
 heterogeneous environment of §V: non-iid 2-class shards, a fixed
-computing-limited subset (FES), and stochastic upload delays consumed by
-the asynchronous AMA ring buffer.
+computing-limited subset (FES), and stochastic upload delays. The server
+rule is a ServerStrategy from the registry — the simulation owns no
+algorithm logic, only data movement and evaluation.
 """
 from __future__ import annotations
 
@@ -14,8 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
-from repro.core import async_ama
-from repro.core.ama import ama_aggregate, fedavg_aggregate
+from repro.core import strategies
 from repro.core.client import make_local_train
 from repro.core.scheduler import HeterogeneitySchedule
 
@@ -45,25 +45,16 @@ class FederatedSimulation:
         self.test_data = test_data
         self.sched = HeterogeneitySchedule(fl)
         self.rng = np.random.RandomState(fl.seed + 7)
-        self._local_train = jax.jit(make_local_train(model, fl))
+        self.strategy = strategies.resolve(fl)
+        self._local_train = jax.jit(make_local_train(model, fl,
+                                                     self.strategy))
+        self._aggregate = jax.jit(self.strategy.aggregate)
         self._eval_fn = eval_fn
         self.eval_batch = eval_batch
 
         self.params = model.init(jax.random.PRNGKey(fl.seed))
         self.t = 0
-        self.queue = (async_ama.init_queue(fl, self.params)
-                      if fl.max_delay > 0 else None)
-
-        self._agg_sync = jax.jit(
-            lambda t, prev, cp, ds, ot: ama_aggregate(fl, t, prev, cp, ds, ot))
-        self._agg_fedavg = jax.jit(
-            lambda prev, cp, ds, keep: fedavg_aggregate(prev, cp, ds, keep))
-        if fl.max_delay > 0:
-            self._enqueue = jax.jit(
-                lambda q, t, cp, d, dl: async_ama.enqueue(fl, q, t, cp, d, dl))
-            self._agg_async = jax.jit(
-                lambda t, prev, cp, ds, ot, q: async_ama.async_ama_aggregate(
-                    fl, t, prev, cp, ds, ot, q))
+        self.aux = self.strategy.init_state(self.params)
 
     # ------------------------------------------------------------------
     def _steps_per_round(self) -> int:
@@ -79,30 +70,18 @@ class FederatedSimulation:
                                                 fl.local_batch_size)
                    for i in rs.selected]
         batches = {k: np.stack([b[k] for b in batches]) for k in batches[0]}
-        limited = jnp.asarray(rs.limited)
-        data_sizes = jnp.asarray(
-            [len(self.clients[i]) for i in rs.selected], jnp.float32)
+        sched = {
+            "limited": jnp.asarray(rs.limited),
+            "delayed": jnp.asarray(rs.delayed),
+            "delays": jnp.asarray(rs.delays),
+            "data_sizes": jnp.asarray(
+                [len(self.clients[i]) for i in rs.selected], jnp.float32),
+        }
 
-        client_params, losses = self._local_train(self.params, batches, limited)
-        on_time = jnp.asarray(~rs.delayed)
-
-        if fl.algorithm == "fedavg":
-            keep = jnp.logical_and(on_time, jnp.asarray(~rs.limited))
-            self.params = self._agg_fedavg(self.params, client_params,
-                                           data_sizes, keep)
-        elif fl.algorithm == "fedprox":
-            self.params = self._agg_fedavg(self.params, client_params,
-                                           data_sizes, on_time)
-        elif fl.max_delay > 0:
-            self.queue = self._enqueue(self.queue, self.t, client_params,
-                                       jnp.asarray(rs.delayed),
-                                       jnp.asarray(rs.delays))
-            self.params, self.queue = self._agg_async(
-                self.t, self.params, client_params, data_sizes, on_time,
-                self.queue)
-        else:
-            self.params = self._agg_sync(self.t, self.params, client_params,
-                                         data_sizes, on_time)
+        client_params, losses = self._local_train(self.params, batches,
+                                                  sched["limited"])
+        self.params, self.aux = self._aggregate(
+            jnp.int32(self.t), self.params, client_params, sched, self.aux)
         self.t += 1
         return float(jnp.mean(losses))
 

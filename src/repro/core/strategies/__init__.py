@@ -1,0 +1,19 @@
+"""Pluggable server-strategy subsystem — the one home for algorithm
+dispatch. Importing this package registers the built-in strategies:
+
+    ama (alias ama_fes) | async_ama | fedavg | fedprox | fedopt
+
+Use ``resolve(fl)`` to get the strategy instance for a config, or
+``get(name)`` / ``names()`` to address the registry directly.
+"""
+from repro.core.strategies.base import (ServerStrategy, get, names, register,
+                                        resolve)
+from repro.core.strategies.ama import AMAStrategy
+from repro.core.strategies.async_ama import AsyncAMAStrategy
+from repro.core.strategies.fedavg import FedAvgStrategy
+from repro.core.strategies.fedopt import FedOptStrategy
+from repro.core.strategies.fedprox import FedProxStrategy
+
+__all__ = ["ServerStrategy", "register", "resolve", "get", "names",
+           "AMAStrategy", "AsyncAMAStrategy", "FedAvgStrategy",
+           "FedOptStrategy", "FedProxStrategy"]

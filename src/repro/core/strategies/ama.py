@@ -1,0 +1,34 @@
+"""Synchronous AMA (paper Eq. 5) as a ServerStrategy.
+
+Client side this is the paper's AMA-FES pairing: when FES is enabled the
+gradient of computing-limited devices is masked to the classifier split
+(Eq. 2) via ``masked_update``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.ama import ama_aggregate
+from repro.core.strategies.base import ServerStrategy, register
+from repro.optim.masked import masked_update
+
+
+@register
+class AMAStrategy(ServerStrategy):
+    name = "ama"
+    aliases = ("ama_fes",)   # seed config name; resolve() picks async when
+                             # the environment has delays (max_delay > 0)
+
+    def local_grad_transform(self, grads, params, global_params, fes_mask,
+                             limited):
+        del params, global_params
+        if self.fl.fes_enabled:
+            return masked_update(grads, fes_mask, limited)
+        return grads
+
+    def aggregate(self, t, prev_global, client_params, sched, aux_state):
+        on_time = jnp.logical_not(sched["delayed"])
+        new_global = ama_aggregate(
+            self.fl, t, prev_global, client_params, sched["data_sizes"],
+            on_time, use_kernel=self.fl.use_kernel)
+        return new_global, aux_state

@@ -1,0 +1,34 @@
+"""Asynchronous AMA (paper Eqs. 6-11) as a ServerStrategy.
+
+The O(max_delay) ring buffer of gamma^- pre-weighted pending updates is
+strategy-owned aux state: it rides the round-loop carry (including
+through the fused ``lax.scan`` engine) instead of living as a special
+"queue" field the round loop has to know about.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import async_ama
+from repro.core.strategies.ama import AMAStrategy
+from repro.core.strategies.base import register
+
+
+@register
+class AsyncAMAStrategy(AMAStrategy):
+    name = "async_ama"
+    aliases = ()
+    stateful = True
+
+    def init_state(self, params):
+        return {"queue": async_ama.init_queue(self.fl, params)}
+
+    def aggregate(self, t, prev_global, client_params, sched, aux_state):
+        on_time = jnp.logical_not(sched["delayed"])
+        queue = async_ama.enqueue(self.fl, aux_state["queue"], t,
+                                  client_params, sched["delayed"],
+                                  sched["delays"])
+        new_global, queue = async_ama.async_ama_aggregate(
+            self.fl, t, prev_global, client_params, sched["data_sizes"],
+            on_time, queue, use_kernel=self.fl.use_kernel)
+        return new_global, {"queue": queue}

@@ -1,0 +1,23 @@
+"""Naive FL baseline (the paper's "FedAvg"): weighted average of the
+clients that both finished (not computing-limited) and arrived on time;
+no mixing with the previous model, no staleness handling."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.ama import fedavg_aggregate
+from repro.core.strategies.base import ServerStrategy, register
+
+
+@register
+class FedAvgStrategy(ServerStrategy):
+    name = "fedavg"
+
+    def aggregate(self, t, prev_global, client_params, sched, aux_state):
+        del t
+        on_time = jnp.logical_not(sched["delayed"])
+        keep = jnp.logical_and(on_time, jnp.logical_not(sched["limited"]))
+        new_global = fedavg_aggregate(prev_global, client_params,
+                                      sched["data_sizes"], keep,
+                                      use_kernel=self.fl.use_kernel)
+        return new_global, aux_state

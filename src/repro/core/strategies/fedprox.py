@@ -1,0 +1,37 @@
+"""FedProx baseline (paper Eq. 4): proximal gradient pull toward the
+global model plus "partial work" — computing-limited devices run a
+fraction of the local steps instead of masking gradients."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ama import fedavg_aggregate
+from repro.core.strategies.base import ServerStrategy, register
+
+
+@register
+class FedProxStrategy(ServerStrategy):
+    name = "fedprox"
+
+    def local_grad_transform(self, grads, params, global_params, fes_mask,
+                             limited):
+        del fes_mask, limited
+        rho = self.fl.fedprox_rho
+        return jax.tree.map(
+            lambda gi, p, p0: gi + 2.0 * rho
+            * (p.astype(jnp.float32)
+               - p0.astype(jnp.float32)).astype(gi.dtype),
+            grads, params, global_params)
+
+    def local_steps(self, n_steps: int, limited):
+        n_partial = max(1, int(self.fl.fedprox_partial * n_steps))
+        return jnp.where(limited, jnp.int32(n_partial), jnp.int32(n_steps))
+
+    def aggregate(self, t, prev_global, client_params, sched, aux_state):
+        del t
+        on_time = jnp.logical_not(sched["delayed"])
+        new_global = fedavg_aggregate(prev_global, client_params,
+                                      sched["data_sizes"], on_time,
+                                      use_kernel=self.fl.use_kernel)
+        return new_global, aux_state

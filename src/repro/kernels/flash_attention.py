@@ -24,7 +24,10 @@ NEG_INF = -1e30
 def _kernel(q_ref, k_ref, v_ref, out_ref, *, scale: float, causal: bool,
             window: int, block_q: int, block_k: int, seq_len: int):
     qi = pl.program_id(1)
-    q = q_ref[0].astype(jnp.float32) * scale          # (block_q, hd)
+    # NOTE: size-1 pl.ds slices (not bare int indices) throughout — int
+    # indices break interpret-mode state discharge on this JAX version.
+    q = pl.load(q_ref, (pl.ds(0, 1), slice(None), slice(None)))
+    q = q[0].astype(jnp.float32) * scale              # (block_q, hd)
     q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
 
     m0 = jnp.full((block_q, 1), NEG_INF, jnp.float32)
@@ -43,10 +46,10 @@ def _kernel(q_ref, k_ref, v_ref, out_ref, *, scale: float, causal: bool,
 
     def body(ki, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(ki * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(ki * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
+        k = pl.load(k_ref, (pl.ds(0, 1), pl.dslice(ki * block_k, block_k),
+                            slice(None)))[0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.ds(0, 1), pl.dslice(ki * block_k, block_k),
+                            slice(None)))[0].astype(jnp.float32)
         s = q @ k.T                                    # (block_q, block_k)
         k_pos = ki * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (1, block_k), 1)
@@ -64,7 +67,8 @@ def _kernel(q_ref, k_ref, v_ref, out_ref, *, scale: float, causal: bool,
         return m_new, l_new, acc_new
 
     m, l, acc = jax.lax.fori_loop(lo, n_k, body, (m0, l0, acc0))
-    out_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(out_ref.dtype)
+    out = (acc / jnp.maximum(l, 1e-30)).astype(out_ref.dtype)
+    pl.store(out_ref, (pl.ds(0, 1), slice(None), slice(None)), out[None])
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",

@@ -3,12 +3,21 @@
 Two modes:
   * paper scale (default): K simulated clients on the host device —
     exactly the paper's §V experiment with all heterogeneity knobs.
-  * --pod: the jitted pod-scale federated round (C cohorts over the FL
-    mesh view). On this CPU container it runs the same program on the
-    single real device; on a v5e pod the identical code spans 256 chips.
+  * --pod: the pod-scale federated engine (C cohorts over the FL mesh
+    view). By default the WHOLE run is one fused ``lax.scan`` program —
+    one compile, zero per-round dispatch; ``--no-scan`` falls back to
+    the per-round-jit loop (the configuration the round-throughput
+    benchmark compares against). On this CPU container it runs the same
+    program on the single real device; on a v5e pod the identical code
+    spans 256 chips.
+
+``--algorithm`` accepts any name in the server-strategy registry
+(repro.core.strategies) — adding a strategy file extends this launcher
+with no edits here.
 
 Examples:
   python -m repro.launch.train --arch paper-cnn --rounds 60 --p-limited 0.5
+  python -m repro.launch.train --algorithm fedopt --rounds 5
   python -m repro.launch.train --arch minitron-8b --pod --rounds 3 --reduced
 """
 from __future__ import annotations
@@ -23,7 +32,8 @@ import numpy as np
 from repro.checkpoint.io import save
 from repro.configs.base import FLConfig, reduced
 from repro.configs.registry import get_arch
-from repro.core.round import init_state, make_round_step
+from repro.core import strategies
+from repro.core.round import init_state, make_round_step, make_train_loop
 from repro.core.scheduler import HeterogeneitySchedule
 from repro.core.simulation import FederatedSimulation
 from repro.data.partition import shard_partition
@@ -48,16 +58,7 @@ def paper_scale(args, fl: FLConfig):
     return hist
 
 
-def pod_scale(args, fl: FLConfig):
-    cfg = get_arch(args.arch)
-    if args.reduced:
-        cfg = reduced(cfg)
-    model = build_model(cfg)
-    state = init_state(model, fl, jax.random.PRNGKey(fl.seed))
-    step = jax.jit(make_round_step(model, fl))
-    sched_gen = HeterogeneitySchedule(
-        FLConfig(**{**fl.__dict__, "num_clients": fl.cohorts,
-                    "clients_per_round": fl.cohorts}))
+def _pod_batch(cfg, fl: FLConfig, args):
     C, steps, b, S = fl.cohorts, fl.local_steps, args.batch, args.seq
     data = make_lm_tokens(C * steps * b, S + 1, cfg.vocab_size,
                           n_topics=C, seed=fl.seed)
@@ -71,17 +72,48 @@ def pod_scale(args, fl: FLConfig):
     if cfg.family == "audio":
         batch["frame_emb"] = jnp.zeros(
             (C, steps, b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
-    for r in range(args.rounds):
-        rs = sched_gen.round(r)
-        sched = {"limited": jnp.asarray(rs.limited[:C]),
-                 "delayed": jnp.asarray(rs.delayed[:C]),
-                 "delays": jnp.asarray(rs.delays[:C]),
-                 "data_sizes": jnp.ones((C,), jnp.float32)}
+    return batch
+
+
+def pod_scale(args, fl: FLConfig):
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = build_model(cfg)
+    strategy = strategies.resolve(fl)
+    state = init_state(model, fl, jax.random.PRNGKey(fl.seed), strategy)
+    C = fl.cohorts
+    sched_gen = HeterogeneitySchedule(
+        fl.with_(num_clients=C, clients_per_round=C))
+    batch = _pod_batch(cfg, fl, args)
+    sb = sched_gen.batch(0, args.rounds)
+    scheds = {"limited": jnp.asarray(sb["limited"]),
+              "delayed": jnp.asarray(sb["delayed"]),
+              "delays": jnp.asarray(sb["delays"]),
+              "data_sizes": jnp.ones((args.rounds, C), jnp.float32)}
+
+    if args.no_scan:
+        step = jax.jit(make_round_step(model, fl, strategy))
+        for r in range(args.rounds):
+            sched = jax.tree.map(lambda x: x[r], scheds)
+            t0 = time.time()
+            state, metrics = step(state, batch, sched)
+            loss = float(metrics["loss"])
+            print(f"round {r}: loss={loss:.4f} on_time="
+                  f"{int(metrics['n_on_time'])}/{C} ({time.time()-t0:.2f}s)")
+    else:
+        loop = make_train_loop(model, fl, strategy)
         t0 = time.time()
-        state, metrics = step(state, batch, sched)
-        loss = float(metrics["loss"])
-        print(f"round {r}: loss={loss:.4f} on_time="
-              f"{int(metrics['n_on_time'])}/{C} ({time.time()-t0:.2f}s)")
+        state, metrics = loop(state, batch, scheds)
+        jax.block_until_ready(metrics)
+        dt = time.time() - t0
+        losses = np.asarray(metrics["loss"])
+        on_time = np.asarray(metrics["n_on_time"])
+        for r in range(args.rounds):
+            print(f"round {r}: loss={losses[r]:.4f} "
+                  f"on_time={int(on_time[r])}/{C}")
+        print(f"{args.rounds} rounds in one fused scan: {dt:.2f}s total "
+              f"({dt/args.rounds*1e3:.1f} ms/round incl. compile)")
     if args.checkpoint:
         save(args.checkpoint, state["params"])
         print(f"saved {args.checkpoint}")
@@ -96,7 +128,12 @@ def main():
     ap.add_argument("--reduced", action="store_true",
                     help="reduced model variant (CPU-sized)")
     ap.add_argument("--algorithm", default="ama_fes",
-                    choices=["ama_fes", "fedavg", "fedprox"])
+                    choices=strategies.names())
+    ap.add_argument("--no-scan", action="store_true",
+                    help="pod: per-round jit loop instead of the fused scan")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route the server mix through the fused Pallas "
+                         "kernel (interpret-mode off-TPU)")
     ap.add_argument("--p-limited", type=float, default=0.25)
     ap.add_argument("--p-delay", type=float, default=0.0)
     ap.add_argument("--max-delay", type=int, default=0)
@@ -116,6 +153,7 @@ def main():
                   local_epochs=2, local_batch_size=25, lr=args.lr,
                   algorithm=args.algorithm, p_limited=args.p_limited,
                   p_delay=args.p_delay, max_delay=args.max_delay,
+                  use_kernel=args.use_kernel,
                   cohorts=args.cohorts, local_steps=args.local_steps,
                   seed=args.seed)
     if args.pod:

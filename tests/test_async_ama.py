@@ -6,7 +6,10 @@ literally keeps every delayed update and applies Eqs. 9-11 at arrival.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hyp = pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import FLConfig
 from repro.core import async_ama as aa

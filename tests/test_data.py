@@ -1,6 +1,9 @@
 """Data substrate: synthetic sets + non-iid partition properties."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hyp = pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.data.partition import (dirichlet_partition, iid_partition,
                                   shard_partition)

@@ -1,0 +1,52 @@
+"""Heterogeneity scheduler: batch(t0, n) must be bit-identical to n
+sequential round(t) calls (the contract the fused scan engine rides on),
+and the dead RNG state stays dead."""
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core.scheduler import HeterogeneitySchedule
+
+
+@pytest.mark.parametrize("t0,n", [(0, 1), (0, 5), (7, 8), (123, 17)])
+@pytest.mark.parametrize("p_delay,max_delay", [(0.0, 0), (0.4, 5)])
+def test_batch_rows_bit_identical_to_sequential_rounds(t0, n, p_delay,
+                                                       max_delay):
+    fl = FLConfig(num_clients=20, clients_per_round=6, p_limited=0.3,
+                  p_delay=p_delay, max_delay=max_delay, seed=3)
+    sched = HeterogeneitySchedule(fl)
+    got = sched.batch(t0, n)
+    assert got["selected"].shape == (n, fl.clients_per_round)
+    for i in range(n):
+        rs = sched.round(t0 + i)
+        np.testing.assert_array_equal(got["selected"][i], rs.selected)
+        np.testing.assert_array_equal(got["limited"][i], rs.limited)
+        np.testing.assert_array_equal(got["delayed"][i], rs.delayed)
+        np.testing.assert_array_equal(got["delays"][i], rs.delays)
+
+
+def test_batch_independent_of_batching_layout():
+    """Property behind the bit-identity: round t's schedule is a pure
+    function of (seed, t), however the rounds are chunked."""
+    fl = FLConfig(num_clients=10, clients_per_round=4, p_delay=0.5,
+                  max_delay=3, seed=11)
+    sched = HeterogeneitySchedule(fl)
+    whole = sched.batch(0, 12)
+    split = {k: np.concatenate([sched.batch(0, 5)[k], sched.batch(5, 7)[k]])
+             for k in whole}
+    for k in whole:
+        np.testing.assert_array_equal(whole[k], split[k])
+
+
+def test_dead_rng_removed():
+    sched = HeterogeneitySchedule(FLConfig())
+    assert not hasattr(sched, "_rng")
+
+
+def test_no_delay_config_emits_unit_delays():
+    fl = FLConfig(num_clients=8, clients_per_round=4, p_delay=0.0,
+                  max_delay=0)
+    got = HeterogeneitySchedule(fl).batch(0, 4)
+    assert not got["delayed"].any()
+    np.testing.assert_array_equal(got["delays"],
+                                  np.ones((4, 4), np.int32))

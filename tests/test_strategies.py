@@ -1,0 +1,231 @@
+"""Server-strategy subsystem: registry, seed-equivalence of every ported
+strategy, the fedopt extension point, kernel-path parity, and the fused
+scan engine vs the sequential per-round loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig, reduced
+from repro.configs.registry import ARCHS
+from repro.core import async_ama as aa
+from repro.core import strategies
+from repro.core.ama import ama_aggregate, fedavg_aggregate
+from repro.core.round import init_state, make_round_step, make_train_loop
+from repro.models.api import build_model
+
+
+def tree(rng, C=None):
+    f = lambda *s: jnp.asarray(rng.randn(*s), jnp.float32)
+    if C is None:
+        return {"a": f(3, 4), "b": {"c": f(5)}}
+    return {"a": f(C, 3, 4), "b": {"c": f(C, 5)}}
+
+
+def sched_for(rng, C, max_delay=0):
+    delayed = rng.rand(C) < 0.4
+    delays = np.where(delayed, rng.randint(1, max(max_delay, 1) + 1, C), 1)
+    return {"limited": jnp.asarray(rng.rand(C) < 0.5),
+            "delayed": jnp.asarray(delayed),
+            "delays": jnp.asarray(delays.astype(np.int32)),
+            "data_sizes": jnp.asarray(rng.rand(C) + 0.5, jnp.float32)}
+
+
+def assert_trees_close(got, want, **kw):
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6, **kw)
+
+
+# ------------------------------------------------------------ registry ----
+
+def test_registry_names_and_resolve():
+    assert {"ama", "ama_fes", "async_ama", "fedavg", "fedprox",
+            "fedopt"} <= set(strategies.names())
+    assert isinstance(strategies.resolve(FLConfig(algorithm="ama_fes")),
+                      strategies.AMAStrategy)
+    # the seed's implicit upgrade: ama + delays -> async ama
+    s = strategies.resolve(FLConfig(algorithm="ama_fes", max_delay=5))
+    assert isinstance(s, strategies.AsyncAMAStrategy)
+    assert isinstance(strategies.resolve(FLConfig(algorithm="fedopt")),
+                      strategies.FedOptStrategy)
+    with pytest.raises(KeyError):
+        strategies.get("nope")
+
+
+def test_no_dispatch_chains_left():
+    """Acceptance: algorithm dispatch has exactly one home (the registry)."""
+    import repro.core.client
+    import repro.core.round
+    import repro.core.simulation
+    import repro.launch.train
+    for mod in (repro.core.round, repro.core.simulation, repro.launch.train,
+                repro.core.client):
+        with open(mod.__file__) as f:
+            assert "fl.algorithm ==" not in f.read(), mod.__name__
+
+
+# ------------------------------------------- seed equivalence per rule ----
+
+def test_ama_strategy_matches_seed_aggregate():
+    rng = np.random.RandomState(0)
+    fl = FLConfig(algorithm="ama", alpha0=0.2, eta=1e-3)
+    prev, cp = tree(rng), tree(rng, C=4)
+    sched = sched_for(rng, 4)
+    got, aux = strategies.resolve(fl).aggregate(3, prev, cp, sched, {})
+    want = ama_aggregate(fl, 3, prev, cp, sched["data_sizes"],
+                         jnp.logical_not(sched["delayed"]))
+    assert aux == {}
+    assert_trees_close(got, want)
+
+
+def test_async_ama_strategy_matches_seed_over_rounds():
+    rng = np.random.RandomState(1)
+    fl = FLConfig(algorithm="ama_fes", max_delay=3, p_delay=0.4)
+    strat = strategies.resolve(fl)
+    prev_s = prev_m = tree(rng)
+    aux = strat.init_state(prev_s)
+    queue = aa.init_queue(fl, prev_m)
+    for t in range(6):
+        cp = tree(rng, C=4)
+        sched = sched_for(rng, 4, max_delay=3)
+        prev_s, aux = strat.aggregate(t, prev_s, cp, sched, aux)
+        queue = aa.enqueue(fl, queue, t, cp, sched["delayed"],
+                           sched["delays"])
+        prev_m, queue = aa.async_ama_aggregate(
+            fl, t, prev_m, cp, sched["data_sizes"],
+            jnp.logical_not(sched["delayed"]), queue)
+        assert_trees_close(prev_s, prev_m, err_msg=f"round {t}")
+    assert_trees_close(aux["queue"], queue)
+
+
+def test_fedavg_strategy_matches_seed_aggregate():
+    rng = np.random.RandomState(2)
+    fl = FLConfig(algorithm="fedavg")
+    prev, cp = tree(rng), tree(rng, C=4)
+    sched = sched_for(rng, 4)
+    got, _ = strategies.resolve(fl).aggregate(0, prev, cp, sched, {})
+    keep = jnp.logical_and(jnp.logical_not(sched["delayed"]),
+                           jnp.logical_not(sched["limited"]))
+    want = fedavg_aggregate(prev, cp, sched["data_sizes"], keep)
+    assert_trees_close(got, want)
+
+
+def test_fedprox_strategy_matches_seed_aggregate():
+    rng = np.random.RandomState(3)
+    fl = FLConfig(algorithm="fedprox")
+    prev, cp = tree(rng), tree(rng, C=4)
+    sched = sched_for(rng, 4)
+    got, _ = strategies.resolve(fl).aggregate(0, prev, cp, sched, {})
+    want = fedavg_aggregate(prev, cp, sched["data_sizes"],
+                            jnp.logical_not(sched["delayed"]))
+    assert_trees_close(got, want)
+
+
+# ------------------------------------------------ fedopt extension point ----
+
+def test_fedopt_aggregates_and_carries_moments():
+    rng = np.random.RandomState(4)
+    fl = FLConfig(algorithm="fedopt", server_lr=0.1)
+    strat = strategies.resolve(fl)
+    prev = tree(rng)
+    aux = strat.init_state(prev)
+    assert int(aux["step"]) == 0
+    p1, aux = strat.aggregate(0, prev, tree(rng, C=4),
+                              sched_for(rng, 4), aux)
+    p2, aux = strat.aggregate(1, p1, tree(rng, C=4),
+                              sched_for(rng, 4), aux)
+    assert int(aux["step"]) == 2
+    assert any(float(jnp.max(jnp.abs(l))) > 0
+               for l in jax.tree.leaves(aux["m"]))
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         p2, prev)
+    assert max(jax.tree.leaves(moved)) > 0
+    for l in jax.tree.leaves(p2):
+        assert np.all(np.isfinite(np.asarray(l)))
+
+
+def test_fedopt_first_step_is_sign_like_adam():
+    """With zero init moments, step 1 is lr * delta/(|delta| + tau) (bias
+    correction cancels): bounded by server_lr in magnitude."""
+    rng = np.random.RandomState(5)
+    fl = FLConfig(algorithm="fedopt", server_lr=0.05)
+    strat = strategies.resolve(fl)
+    prev = tree(rng)
+    cp = tree(rng, C=3)
+    sched = {"limited": jnp.zeros((3,), bool),
+             "delayed": jnp.zeros((3,), bool),
+             "delays": jnp.ones((3,), jnp.int32),
+             "data_sizes": jnp.ones((3,), jnp.float32)}
+    p1, _ = strat.aggregate(0, prev, cp, sched, strat.init_state(prev))
+    step = jax.tree.map(lambda a, b: np.abs(np.asarray(a - b)), p1, prev)
+    assert max(float(s.max()) for s in jax.tree.leaves(step)) <= 0.05 + 1e-6
+
+
+# ----------------------------------------------------- kernel-path parity ----
+
+@pytest.mark.parametrize("algo,md", [("ama", 0), ("ama_fes", 3),
+                                     ("fedavg", 0), ("fedopt", 0)])
+def test_use_kernel_matches_jnp_path(algo, md):
+    rng = np.random.RandomState(6)
+    base = dict(algorithm=algo, max_delay=md, p_delay=0.4 if md else 0.0)
+    fl_j = FLConfig(**base)
+    fl_k = FLConfig(use_kernel=True, **base)
+    prev = tree(rng)
+    cp = tree(rng, C=3)
+    sched = sched_for(rng, 3, max_delay=md)
+    sj, sk = strategies.resolve(fl_j), strategies.resolve(fl_k)
+    got_j, _ = sj.aggregate(2, prev, cp, sched, sj.init_state(prev))
+    got_k, _ = sk.aggregate(2, prev, cp, sched, sk.init_state(prev))
+    assert_trees_close(got_k, got_j)
+
+
+# -------------------------------------------------- fused scan vs loop ----
+
+@pytest.mark.parametrize("algo,md", [("ama_fes", 0), ("ama_fes", 3),
+                                     ("fedavg", 0), ("fedprox", 0),
+                                     ("fedopt", 0)])
+def test_scan_engine_matches_sequential_rounds(algo, md):
+    """One lax.scan over 5 rounds == 5 sequential round_step calls."""
+    n_rounds, C, steps, b = 5, 2, 2, 4
+    model = build_model(ARCHS["paper-cnn"])
+    fl = FLConfig(algorithm=algo, max_delay=md, p_delay=0.4 if md else 0.0,
+                  lr=0.05)
+    rng = np.random.RandomState(7)
+    batches = {
+        "image": jnp.asarray(rng.randn(n_rounds, C, steps, b, 28, 28, 1),
+                             jnp.float32),
+        "label": jnp.asarray(rng.randint(0, 10, (n_rounds, C, steps, b)),
+                             jnp.int32)}
+    scheds = {
+        "limited": jnp.asarray(rng.rand(n_rounds, C) < 0.5),
+        "delayed": jnp.asarray(rng.rand(n_rounds, C) < (0.4 if md else 0.0)),
+        "delays": jnp.asarray(
+            rng.randint(1, max(md, 1) + 1, (n_rounds, C)), jnp.int32),
+        "data_sizes": jnp.asarray(rng.rand(n_rounds, C) + 0.5, jnp.float32)}
+
+    state0 = init_state(model, fl, jax.random.PRNGKey(0))
+    step = jax.jit(make_round_step(model, fl))
+    state_seq = state0
+    seq_losses = []
+    for r in range(n_rounds):
+        state_seq, metrics = step(state_seq,
+                                  jax.tree.map(lambda x: x[r], batches),
+                                  jax.tree.map(lambda x: x[r], scheds))
+        seq_losses.append(float(metrics["loss"]))
+
+    loop = make_train_loop(model, fl, per_round_batch=True, donate=False)
+    state_scan, metrics = loop(init_state(model, fl, jax.random.PRNGKey(0)),
+                               batches, scheds)
+
+    assert int(state_scan["t"]) == n_rounds
+    np.testing.assert_allclose(np.asarray(metrics["loss"]),
+                               np.asarray(seq_losses), rtol=1e-5, atol=1e-6)
+    for g, w in zip(jax.tree.leaves(state_scan["params"]),
+                    jax.tree.leaves(state_seq["params"])):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-5)
+    for g, w in zip(jax.tree.leaves(state_scan["aux"]),
+                    jax.tree.leaves(state_seq["aux"])):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-5)
