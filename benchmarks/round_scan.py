@@ -15,10 +15,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import env as env_mod
 from repro.configs.base import FLConfig, reduced
 from repro.configs.registry import ARCHS
-from repro.core.round import init_state, make_round_step, make_train_loop
-from repro.core.scheduler import HeterogeneitySchedule
+from repro.core.round import (as_scan_scheds, init_state, make_round_step,
+                              make_train_loop)
 from repro.models.api import build_model
 
 
@@ -29,17 +30,14 @@ def _setup(rounds: int, C: int = 2, steps: int = 2, b: int = 2, S: int = 32):
     rng = np.random.RandomState(0)
     batch = {"tokens": jnp.asarray(
         rng.randint(0, cfg.vocab_size, (C, steps, b, S)), jnp.int32)}
-    sb = HeterogeneitySchedule(
-        fl.with_(num_clients=C, clients_per_round=C)).batch(0, rounds)
-    scheds = {"limited": jnp.asarray(sb["limited"]),
-              "delayed": jnp.asarray(sb["delayed"]),
-              "delays": jnp.asarray(sb["delays"]),
-              "data_sizes": jnp.ones((rounds, C), jnp.float32)}
+    environment = env_mod.resolve(
+        fl.with_(num_clients=C, clients_per_round=C))
+    scheds = as_scan_scheds(environment.batch(0, rounds))
     return model, fl, batch, scheds
 
 
-def run(quick: bool = True) -> dict:
-    rounds = 8 if quick else 32
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    rounds = 4 if smoke else (8 if quick else 32)
     model, fl, batch, scheds = _setup(rounds)
 
     # --- baseline: one jitted call per round (seed architecture)
@@ -91,4 +89,4 @@ def run(quick: bool = True) -> dict:
 
 if __name__ == "__main__":
     import sys
-    run(quick="--full" not in sys.argv)
+    run(quick="--full" not in sys.argv, smoke="--smoke" in sys.argv)

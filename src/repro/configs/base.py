@@ -112,6 +112,21 @@ class FLConfig:
     p_limited: float = 0.25        # ratio of computing-limited devices
     p_delay: float = 0.0           # prob. of transmission delay (0.3 / 0.7)
     max_delay: int = 0             # 5 / 10 / 15 rounds; 0 disables async path
+    # environment name (see repro.env registry):
+    # "bernoulli" | "gilbert_elliott" | "bandwidth" | "trace"
+    env: str = "bernoulli"
+    # gilbert_elliott: two-state Markov fading channel
+    ge_p_gb: float = 0.15          # Good -> Bad transition prob per round
+    ge_p_bg: float = 0.45          # Bad -> Good
+    ge_p_delay_good: float = 0.05  # delay prob on a Good link
+    ge_p_delay_bad: float = 0.9    # delay prob on a Bad link
+    # bandwidth: log-normal uplink rate vs a round deadline
+    bw_upload_mbits: float = 4.0   # model-update upload size (megabits)
+    bw_mean_mbps: float = 2.0      # median uplink rate
+    bw_sigma: float = 0.8          # log-std (shadow fading)
+    bw_deadline_s: float = 1.0     # round deadline (seconds)
+    # trace: .npz replay path ("" -> synthetic mobility trace)
+    trace_path: str = ""
     # server strategy name (see repro.core.strategies registry):
     # "ama" (alias "ama_fes") | "async_ama" | "fedavg" | "fedprox" | "fedopt"
     algorithm: str = "ama_fes"

@@ -1,4 +1,10 @@
-"""Architecture registry: --arch <id> -> ModelConfig."""
+"""Architecture registry: --arch <id> -> ModelConfig.
+
+Also the config-side door to the environment/scenario registries
+(``repro.env``): ``get_scenario`` / ``scenario_names`` resolve a named
+experimental condition to FLConfig knobs (lazy imports — repro.env
+imports configs.base, so the env package must not be imported at this
+module's import time)."""
 from __future__ import annotations
 
 from repro.configs import (llama3_405b, minitron_8b, mistral_large_123b,
@@ -48,6 +54,22 @@ def get_shape(name: str) -> ShapeConfig:
     if name not in SHAPES:
         raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
     return SHAPES[name]
+
+
+def get_scenario(name: str):
+    """Named scenario -> Scenario (see repro.env.scenarios)."""
+    from repro.env import scenarios
+    return scenarios.get(name)
+
+
+def scenario_names() -> list[str]:
+    from repro.env import scenarios
+    return scenarios.names()
+
+
+def environment_names() -> list[str]:
+    from repro import env
+    return env.names()
 
 
 def serving_config(name: str) -> ModelConfig:

@@ -13,6 +13,7 @@ only the classifier omega^c. Two execution modes:
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from repro.models.api import CLASSIFIER_KEYS
 
@@ -37,7 +38,6 @@ def fes_loss_fn(model):
 
 
 def count_trainable(params, mask):
-    import numpy as np
     total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
     train = sum(
         int(np.prod(x.shape)) if m else 0

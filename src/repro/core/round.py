@@ -9,14 +9,22 @@ communication of the round — the paper's rare-global-aggregation
 pattern, TPU-native.
 
 ``make_train_loop`` goes one step further: it rolls N rounds into one
-``jax.lax.scan`` over precomputed schedule arrays (see
-``HeterogeneitySchedule.batch``), so an entire run compiles to ONE XLA
-program — no per-round Python dispatch, no per-round host sync, and the
-state carry is donated so the global model is updated in place.
+``jax.lax.scan`` over precomputed schedule arrays, so an entire run
+compiles to ONE XLA program — no per-round Python dispatch, no per-round
+host sync, and the state carry is donated so the global model is updated
+in place.
+
+THE SCHEDULE CONTRACT: every environment in the ``repro.env`` registry
+emits stacked ``{selected, limited, delayed, delays, data_sizes}``
+arrays via ``Environment.batch(t0, n)`` (row i bit-identical to
+``round(t0 + i)``); ``as_scan_scheds`` lifts that numpy dict onto the
+device in the exact leaf set the scan body consumes. Any scenario —
+i.i.d. Bernoulli, bursty Gilbert-Elliott fading, bandwidth deadlines,
+trace replay — therefore drives this engine unchanged.
 
 All algorithm behaviour comes from the ServerStrategy registry
-(``repro.core.strategies``); this module contains no per-algorithm
-branching.
+(``repro.core.strategies``); this module contains no per-algorithm or
+per-environment branching.
 """
 from __future__ import annotations
 
@@ -26,6 +34,17 @@ import jax.numpy as jnp
 from repro.configs.base import FLConfig
 from repro.core import strategies
 from repro.core.client import make_fes_local_train, make_local_train
+
+
+def as_scan_scheds(sb: dict) -> dict:
+    """Device-ready scan schedules from a stacked ``Environment.batch``
+    dict: keeps exactly the leaves the round body consumes (``selected``
+    is host-side — it addresses client datasets, not cohort slots) and
+    re-types them for the scan carry."""
+    return {"limited": jnp.asarray(sb["limited"]),
+            "delayed": jnp.asarray(sb["delayed"]),
+            "delays": jnp.asarray(sb["delays"]),
+            "data_sizes": jnp.asarray(sb["data_sizes"], jnp.float32)}
 
 
 def init_state(model, fl: FLConfig, key, strategy=None):
@@ -68,7 +87,7 @@ def make_train_loop(model, fl: FLConfig, strategy=None, *,
 
     Returns train_loop(state, batch, scheds) -> (state, metrics) where
     ``scheds`` leaves carry a leading (n_rounds,) axis (the stacked
-    output of ``HeterogeneitySchedule.batch``) and metrics come back
+    output of ``Environment.batch`` / ``as_scan_scheds``) and metrics come back
     stacked per round. With ``per_round_batch`` the batch pytree also
     carries a leading (n_rounds,) axis (fresh data every round — the
     correctness-equivalence configuration); without it the same batch is

@@ -1,69 +1,36 @@
-"""Deterministic heterogeneity simulator (paper §V settings).
+"""Backward-compat shim over the environment subsystem (``repro.env``).
 
-Generates, from a seed, the per-round schedule the paper's environment
-implies: which clients are selected (m of K), which are computing-limited
-(ratio p, a FIXED subset of devices, as in the paper), and which uploads are
-delayed (prob. p_delay, delay ~ U{1..max_delay}).
+The seed's deterministic heterogeneity simulator lives on as the
+``bernoulli`` environment (``repro.env.bernoulli`` — a bit-identical
+port, enforced by tests/test_env.py); ``HeterogeneitySchedule`` is now a
+thin wrapper over it so existing callers keep working. New code should
+use ``repro.env.resolve(fl)`` and pick a channel model / scenario.
 
 The schedule is data, not code: the same compiled round consumes any
-scenario (moderate 30% / severe 70%, max delay 5/10/15...).
+scenario (moderate 30% / severe 70%, bursty fading, bandwidth-limited,
+trace replay...).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-
-import numpy as np
-
 from repro.configs.base import FLConfig
-
-
-@dataclass
-class RoundSchedule:
-    selected: np.ndarray    # (m,) client indices
-    limited: np.ndarray     # (m,) bool — computing-limited (FES) clients
-    delayed: np.ndarray     # (m,) bool — upload delayed
-    delays: np.ndarray      # (m,) int32 in [1, max_delay] (1 where not delayed)
+from repro.env import RoundSchedule  # noqa: F401  (re-export, old import path)
+from repro.env import get as _get_env
 
 
 class HeterogeneitySchedule:
+    """Thin wrapper: the seed API over ``env.get("bernoulli")``."""
+
     def __init__(self, fl: FLConfig):
         self.fl = fl
-        rng = np.random.RandomState(fl.seed)
-        # fixed computing-limited subset (paper: a device *is* limited)
-        k = int(round(fl.p_limited * fl.num_clients))
-        self.limited_set = set(
-            rng.choice(fl.num_clients, size=k, replace=False).tolist())
+        self._env = _get_env("bernoulli")(fl)
+        # seed-era attribute, still used by callers/tests
+        self.limited_set = self._env.devices.limited_set
 
     def round(self, t: int) -> RoundSchedule:
-        fl = self.fl
-        rng = np.random.RandomState(fl.seed * 1_000_003 + t)  # reproducible per-round
-        sel = rng.choice(fl.num_clients, size=fl.clients_per_round,
-                         replace=False).astype(np.int32)
-        limited = np.array([i in self.limited_set for i in sel])
-        if fl.max_delay > 0 and fl.p_delay > 0:
-            delayed = rng.rand(fl.clients_per_round) < fl.p_delay
-            delays = rng.randint(1, fl.max_delay + 1,
-                                 size=fl.clients_per_round).astype(np.int32)
-        else:
-            delayed = np.zeros(fl.clients_per_round, bool)
-            delays = np.ones(fl.clients_per_round, np.int32)
-        delays = np.where(delayed, delays, 1).astype(np.int32)
-        return RoundSchedule(sel, limited, delayed, delays)
+        return self._env.round(t)
 
-    def batch(self, t0: int, n_rounds: int) -> dict[str, np.ndarray]:
-        """Stacked (n_rounds, C) schedule arrays for the fused scan engine.
-
-        Row i is BIT-IDENTICAL to ``round(t0 + i)``: each round owns an
-        independent RNG stream keyed on its absolute index, so the
-        schedule of round t cannot depend on how (or whether) it was
-        batched — the contract the scan-vs-python-loop equivalence test
-        relies on. The per-round draws therefore cannot be collapsed
-        into one vectorised stream; the vectorisation is the output
-        layout (stacked arrays as scan data), produced from the one
-        authoritative ``round()`` implementation.
-        """
-        rows = [self.round(t0 + i) for i in range(n_rounds)]
-        return {"selected": np.stack([r.selected for r in rows]),
-                "limited": np.stack([r.limited for r in rows]),
-                "delayed": np.stack([r.delayed for r in rows]),
-                "delays": np.stack([r.delays for r in rows])}
+    def batch(self, t0: int, n_rounds: int):
+        """Stacked (n_rounds, m) schedule arrays for the fused scan
+        engine; row i is bit-identical to ``round(t0 + i)`` (the
+        contract lives in ``repro.env.base``)."""
+        return self._env.batch(t0, n_rounds)

@@ -2,9 +2,12 @@
 
 Drives the same jitted round engine as the pod path, but with the full
 heterogeneous environment of §V: non-iid 2-class shards, a fixed
-computing-limited subset (FES), and stochastic upload delays. The server
-rule is a ServerStrategy from the registry — the simulation owns no
-algorithm logic, only data movement and evaluation.
+computing-limited subset (FES), and stochastic upload delays. Both
+halves are plugins: the server rule is a ServerStrategy from
+``repro.core.strategies`` and the world is an Environment from
+``repro.env`` (``fl.env``: bernoulli / gilbert_elliott / bandwidth /
+trace) — the simulation owns no algorithm or channel logic, only data
+movement and evaluation.
 """
 from __future__ import annotations
 
@@ -14,10 +17,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import env as env_mod
 from repro.configs.base import FLConfig
 from repro.core import strategies
 from repro.core.client import make_local_train
-from repro.core.scheduler import HeterogeneitySchedule
 
 
 @dataclass
@@ -38,12 +41,15 @@ class History:
 
 class FederatedSimulation:
     def __init__(self, model, fl: FLConfig, clients, test_data,
-                 eval_fn=None, eval_batch: int = 512):
+                 eval_fn=None, eval_batch: int = 512, environment=None):
         self.model = model
         self.fl = fl
         self.clients = clients
         self.test_data = test_data
-        self.sched = HeterogeneitySchedule(fl)
+        # any registered environment (fl.env); data sizes feed the
+        # |D_i| aggregation weights through the schedule contract
+        self.env = environment or env_mod.resolve(
+            fl, data_sizes=np.array([len(c) for c in clients], np.float32))
         self.rng = np.random.RandomState(fl.seed + 7)
         self.strategy = strategies.resolve(fl)
         self._local_train = jax.jit(make_local_train(model, fl,
@@ -64,7 +70,7 @@ class FederatedSimulation:
 
     def run_round(self) -> float:
         fl = self.fl
-        rs = self.sched.round(self.t)
+        rs = self.env.round(self.t)
         steps = self._steps_per_round()
         batches = [self.clients[i].sample_steps(self.rng, steps,
                                                 fl.local_batch_size)
@@ -74,8 +80,7 @@ class FederatedSimulation:
             "limited": jnp.asarray(rs.limited),
             "delayed": jnp.asarray(rs.delayed),
             "delays": jnp.asarray(rs.delays),
-            "data_sizes": jnp.asarray(
-                [len(self.clients[i]) for i in rs.selected], jnp.float32),
+            "data_sizes": jnp.asarray(rs.data_sizes, jnp.float32),
         }
 
         client_params, losses = self._local_train(self.params, batches,

@@ -1,0 +1,28 @@
+"""Pluggable heterogeneous-environment subsystem — the one home for
+"what does the world do to the clients". Importing this package
+registers the built-in environments:
+
+    bernoulli (alias iid_delay) | gilbert_elliott (ge, bursty)
+    | bandwidth (snr) | trace (mobility)
+
+Use ``resolve(fl)`` to get the environment for a config (``fl.env``),
+``get(name)`` / ``names()`` to address the registry directly, and
+``scenarios`` for named environment + FLConfig-knob bindings.
+"""
+from repro.env import scenarios
+from repro.env.base import (ChannelModel, DeviceProfile, Environment,
+                            FixedTierProfile, Participation, RoundSchedule,
+                            UniformParticipation, get, names, register,
+                            resolve, round_rng, side_rng)
+from repro.env.bandwidth import BandwidthEnvironment
+from repro.env.bernoulli import BernoulliEnvironment
+from repro.env.gilbert_elliott import GilbertElliottEnvironment
+from repro.env.trace import (TraceEnvironment, save_trace,
+                             synth_mobility_trace)
+
+__all__ = ["Environment", "ChannelModel", "DeviceProfile", "Participation",
+           "RoundSchedule", "FixedTierProfile", "UniformParticipation",
+           "register", "resolve", "get", "names", "round_rng", "side_rng",
+           "scenarios", "BernoulliEnvironment", "GilbertElliottEnvironment",
+           "BandwidthEnvironment", "TraceEnvironment", "save_trace",
+           "synth_mobility_trace"]

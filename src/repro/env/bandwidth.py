@@ -1,0 +1,44 @@
+"""SNR/bandwidth channel: upload latency against a round deadline.
+
+Per round each selected client draws an uplink rate from a log-normal
+distribution (``bw_mean_mbps`` median, ``bw_sigma`` log-std — the usual
+shadow-fading model); uploading the ``bw_upload_mbits`` model update
+then takes ``latency = bits / rate`` seconds. A round closes after
+``bw_deadline_s`` seconds, so an upload that needs r deadlines arrives
+with ``r - 1`` rounds of staleness:
+
+    delayed = latency > deadline
+    delay   = clip(ceil(latency / deadline) - 1, 1, max_delay)
+
+This maps a physical channel (rate in Mbps, deadline in seconds) onto
+the paper's abstract delay-rounds without touching the aggregation rule.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.env.base import ChannelModel, Environment, register
+
+
+class BandwidthChannel(ChannelModel):
+    def draw(self, t, selected, rng):
+        fl = self.fl
+        m = len(selected)
+        if fl.max_delay <= 0:
+            return self._no_delays(m)
+        rate = fl.bw_mean_mbps * np.exp(fl.bw_sigma * rng.randn(m))
+        latency = fl.bw_upload_mbits / np.maximum(rate, 1e-9)
+        deadlines = np.ceil(latency / fl.bw_deadline_s).astype(np.int64)
+        delayed = deadlines > 1
+        delays = np.clip(deadlines - 1, 1, fl.max_delay).astype(np.int32)
+        delays = np.where(delayed, delays, 1).astype(np.int32)
+        return delayed, delays
+
+
+@register
+class BandwidthEnvironment(Environment):
+    name = "bandwidth"
+    aliases = ("snr",)
+
+    def _make_channel(self, fl):
+        return BandwidthChannel(fl)

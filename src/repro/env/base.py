@@ -1,0 +1,238 @@
+"""The Environment interface and the name-keyed environment registry.
+
+The paper's second challenge — a time-varying wireless environment — is
+data, not code: every scenario reduces to per-round schedule arrays the
+compiled round consumes unchanged. An ``Environment`` packages the three
+places a learning environment can differ:
+
+  * ``Participation`` — which m of K clients take part in round t
+    (uniform sampling, availability windows, ...);
+  * ``DeviceProfile`` — per-client compute tier, FES limited-ness,
+    local-step budget and data size (the paper's FIXED computing-limited
+    subset is the default profile);
+  * ``ChannelModel`` — per-client upload delay/dropout for round t
+    (i.i.d. Bernoulli, bursty two-state Markov fading, SNR/bandwidth
+    draws against a round deadline, ...).
+
+Every environment emits the same ``RoundSchedule`` per round and the
+same stacked ``{selected, limited, delayed, delays, data_sizes}`` arrays
+via ``batch(t0, n_rounds)``, so the ``FederatedSimulation`` paper path,
+the jitted pod round and the fused ``lax.scan`` engine consume any
+scenario without edits.
+
+THE CONTRACT (the scan engine rides on it): ``batch(t0, n)`` row ``i``
+is BIT-IDENTICAL to ``round(t0 + i)``. Round t's schedule must therefore
+be a pure function of (config, t) — per-round RNG streams are keyed on
+the absolute round index, and stateful channels (Markov chains) memoize
+a state trajectory that is itself a pure function of (seed, t). The
+property test in ``tests/test_env.py`` enforces this for every
+registered environment.
+
+Adding an environment is one file: subclass ``Environment``, decorate it
+with ``@register``, import it from ``env/__init__.py`` — it becomes
+reachable from every entry point (``FLConfig(env=...)``, ``--env`` on
+the launcher, the scenario registry) with no dispatch chain to edit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs.base import FLConfig
+
+
+@dataclass
+class RoundSchedule:
+    """One round's environment draw (the schedule contract)."""
+
+    selected: np.ndarray     # (m,) int32 client indices
+    limited: np.ndarray      # (m,) bool — computing-limited (FES) clients
+    delayed: np.ndarray      # (m,) bool — upload delayed
+    delays: np.ndarray       # (m,) int32 in [1, max_delay] (1 where on time)
+    data_sizes: np.ndarray   # (m,) float32 — |D_i| aggregation weights
+
+
+def round_rng(fl: FLConfig, t: int) -> np.random.RandomState:
+    """The per-round schedule RNG stream (seed algorithm, unchanged):
+    each round owns an independent stream keyed on its absolute index."""
+    return np.random.RandomState((fl.seed * 1_000_003 + t) % 2**32)
+
+
+def side_rng(fl: FLConfig, t: int) -> np.random.RandomState:
+    """A second per-round stream (channel-state chains, trace synthesis)
+    that cannot collide with ``round_rng`` draws for the same round."""
+    return np.random.RandomState(
+        (fl.seed * 1_000_003 + t + 0x9E3779B9) % 2**32)
+
+
+# ---------------------------------------------------------------------------
+# components
+# ---------------------------------------------------------------------------
+class Participation:
+    """Which clients take part in round t. ``select`` draws from the
+    round's shared RNG stream FIRST (before the channel), preserving the
+    seed's draw order."""
+
+    def __init__(self, fl: FLConfig):
+        self.fl = fl
+
+    def select(self, t: int, rng: np.random.RandomState) -> np.ndarray:
+        raise NotImplementedError
+
+
+class UniformParticipation(Participation):
+    """m of K uniformly without replacement (paper §V)."""
+
+    def select(self, t, rng):
+        return rng.choice(self.fl.num_clients, size=self.fl.clients_per_round,
+                          replace=False).astype(np.int32)
+
+
+class DeviceProfile:
+    """Per-client static device facts: compute tier, FES limited-ness,
+    local-step budget, dataset size (aggregation weight)."""
+
+    def __init__(self, fl: FLConfig, data_sizes: np.ndarray | None = None):
+        self.fl = fl
+        self.has_sizes = data_sizes is not None
+        self._sizes = (None if data_sizes is None
+                       else np.asarray(data_sizes, np.float32))
+
+    def limited(self, selected: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def tier(self, selected: np.ndarray) -> np.ndarray:
+        """Compute tier per selected client (0 = limited, 1 = full)."""
+        return np.where(self.limited(selected), 0, 1).astype(np.int32)
+
+    def step_budget(self, n_steps: int, selected: np.ndarray) -> np.ndarray:
+        """Local-step budget per selected client: limited devices afford
+        only a ``fedprox_partial`` fraction of the full step count."""
+        full = np.full(len(selected), n_steps, np.int32)
+        part = np.maximum(1, (n_steps * self.fl.fedprox_partial)).astype(
+            np.int32)
+        return np.where(self.limited(selected), part, full)
+
+    def sizes(self, selected: np.ndarray) -> np.ndarray:
+        if self._sizes is None:
+            return np.ones(len(selected), np.float32)
+        return self._sizes[selected].astype(np.float32)
+
+
+class FixedTierProfile(DeviceProfile):
+    """The paper's setting: a FIXED subset of devices (ratio p_limited,
+    drawn once from the seed) *is* computing-limited."""
+
+    def __init__(self, fl: FLConfig, data_sizes=None):
+        super().__init__(fl, data_sizes)
+        rng = np.random.RandomState(fl.seed)
+        k = int(round(fl.p_limited * fl.num_clients))
+        self.limited_set = set(
+            rng.choice(fl.num_clients, size=k, replace=False).tolist())
+
+    def limited(self, selected):
+        return np.array([i in self.limited_set for i in selected])
+
+
+class ChannelModel:
+    """Per-client upload delay for round t. ``draw`` consumes the
+    round's shared RNG stream AFTER participation, preserving the seed's
+    draw order; stateful channels key any extra streams on the absolute
+    round index (``side_rng``) so purity in t survives."""
+
+    def __init__(self, fl: FLConfig):
+        self.fl = fl
+
+    def draw(self, t: int, selected: np.ndarray,
+             rng: np.random.RandomState) -> tuple[np.ndarray, np.ndarray]:
+        """-> (delayed (m,) bool, delays (m,) int32 in [1, max_delay])."""
+        raise NotImplementedError
+
+    def _no_delays(self, m: int) -> tuple[np.ndarray, np.ndarray]:
+        return np.zeros(m, bool), np.ones(m, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# the environment = participation x devices x channel
+# ---------------------------------------------------------------------------
+class Environment:
+    """Base environment: composes the three components with the shared
+    per-round RNG stream. Subclasses usually only override
+    ``_make_channel``; trace replay overrides ``round`` wholesale."""
+
+    #: registry key; aliases are extra names resolving to the same class
+    name: str = ""
+    aliases: tuple[str, ...] = ()
+
+    def __init__(self, fl: FLConfig, data_sizes: np.ndarray | None = None):
+        self.fl = fl
+        self.participation = self._make_participation(fl)
+        self.devices = self._make_devices(fl, data_sizes)
+        self.channel = self._make_channel(fl)
+
+    # component factories ------------------------------------------------
+    def _make_participation(self, fl) -> Participation:
+        return UniformParticipation(fl)
+
+    def _make_devices(self, fl, data_sizes) -> DeviceProfile:
+        return FixedTierProfile(fl, data_sizes)
+
+    def _make_channel(self, fl) -> ChannelModel:
+        raise NotImplementedError
+
+    # the schedule contract ----------------------------------------------
+    def round(self, t: int) -> RoundSchedule:
+        """Round t's schedule — a pure function of (config, t)."""
+        rng = round_rng(self.fl, t)
+        sel = self.participation.select(t, rng)
+        limited = self.devices.limited(sel)
+        delayed, delays = self.channel.draw(t, sel, rng)
+        return RoundSchedule(sel, limited, delayed, delays,
+                             self.devices.sizes(sel))
+
+    def batch(self, t0: int, n_rounds: int) -> dict[str, np.ndarray]:
+        """Stacked (n_rounds, m) schedule arrays for the fused scan
+        engine. Row i is BIT-IDENTICAL to ``round(t0 + i)`` — see the
+        module docstring; the vectorisation is the output layout, not
+        the draws."""
+        rows = [self.round(t0 + i) for i in range(n_rounds)]
+        return {"selected": np.stack([r.selected for r in rows]),
+                "limited": np.stack([r.limited for r in rows]),
+                "delayed": np.stack([r.delayed for r in rows]),
+                "delays": np.stack([r.delays for r in rows]),
+                "data_sizes": np.stack([r.data_sizes for r in rows])}
+
+
+# ---------------------------------------------------------------------------
+# registry (mirrors repro.core.strategies)
+# ---------------------------------------------------------------------------
+_REGISTRY: dict[str, type[Environment]] = {}
+
+
+def register(cls: type[Environment]) -> type[Environment]:
+    """Class decorator: file-local registration under name + aliases."""
+    assert cls.name, cls
+    for key in (cls.name,) + tuple(cls.aliases):
+        assert key not in _REGISTRY or _REGISTRY[key] is cls, key
+        _REGISTRY[key] = cls
+    return cls
+
+
+def names() -> list[str]:
+    """All registered environment names (aliases included), sorted."""
+    return sorted(_REGISTRY)
+
+
+def get(name: str) -> type[Environment]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown environment {name!r}; "
+                       f"registered: {names()}") from None
+
+
+def resolve(fl: FLConfig,
+            data_sizes: np.ndarray | None = None) -> Environment:
+    """Instantiate the environment for a config (``fl.env``)."""
+    return get(fl.env)(fl, data_sizes=data_sizes)

@@ -1,0 +1,39 @@
+"""The seed's i.i.d. Bernoulli-delay environment (paper §V settings).
+
+Uploads are independently delayed with probability ``p_delay`` each
+round; the delay is uniform on {1..max_delay}. Draw order is exactly the
+seed ``HeterogeneitySchedule`` algorithm — ``env.get("bernoulli")`` is
+bit-identical to it (enforced by tests/test_env.py), and
+``HeterogeneitySchedule`` itself is now a thin wrapper over this class.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.env.base import ChannelModel, Environment, register
+
+
+class BernoulliChannel(ChannelModel):
+    """Delayed ~ Bernoulli(p_delay), delay ~ U{1..max_delay}, i.i.d."""
+
+    def draw(self, t, selected, rng):
+        fl = self.fl
+        m = len(selected)
+        if fl.max_delay > 0 and fl.p_delay > 0:
+            delayed = rng.rand(m) < fl.p_delay
+            delays = rng.randint(1, fl.max_delay + 1,
+                                 size=m).astype(np.int32)
+        else:
+            delayed = np.zeros(m, bool)
+            delays = np.ones(m, np.int32)
+        delays = np.where(delayed, delays, 1).astype(np.int32)
+        return delayed, delays
+
+
+@register
+class BernoulliEnvironment(Environment):
+    name = "bernoulli"
+    aliases = ("iid_delay",)
+
+    def _make_channel(self, fl):
+        return BernoulliChannel(fl)

@@ -1,0 +1,66 @@
+"""Gilbert–Elliott bursty fading channel (two-state Markov, per client).
+
+Each client's link sits in a Good or Bad state; per round it flips
+Good->Bad with prob ``ge_p_gb`` and Bad->Good with prob ``ge_p_bg``.
+Bad links delay uploads with high probability and draw LONG delays
+(upper half of {1..max_delay}); good links rarely delay and draw short
+ones — the bursty, temporally-correlated outages the i.i.d. Bernoulli
+model cannot express (the realism gap named by arXiv:2307.10616).
+
+Purity in t (the batch/round contract): the state trajectory over ALL K
+clients is advanced with one ``side_rng(fl, s)`` stream per round s, so
+the state at round t is a pure function of (seed, t) — independent of
+which rounds were queried, in what order, or how they were batched. The
+trajectory is memoized, so sequential sweeps stay O(1) per round.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.env.base import ChannelModel, Environment, register, side_rng
+
+
+class GilbertElliottChannel(ChannelModel):
+    def __init__(self, fl):
+        super().__init__(fl)
+        self._bad: list[np.ndarray] = []   # memoized state trajectory
+
+    def _state(self, t: int) -> np.ndarray:
+        """(K,) bool — Bad-state flags at round t (pure in (seed, t))."""
+        fl = self.fl
+        if not self._bad:
+            # round 0: draw from the chain's stationary distribution
+            p_bad = fl.ge_p_gb / max(fl.ge_p_gb + fl.ge_p_bg, 1e-9)
+            self._bad.append(
+                side_rng(fl, 0).rand(fl.num_clients) < p_bad)
+        while len(self._bad) <= t:
+            s = len(self._bad)
+            u = side_rng(fl, s).rand(fl.num_clients)
+            prev = self._bad[s - 1]
+            self._bad.append(
+                np.where(prev, u >= fl.ge_p_bg, u < fl.ge_p_gb))
+        return self._bad[t]
+
+    def draw(self, t, selected, rng):
+        fl = self.fl
+        m = len(selected)
+        if fl.max_delay <= 0:
+            return self._no_delays(m)
+        bad = self._state(t)[selected]
+        p = np.where(bad, fl.ge_p_delay_bad, fl.ge_p_delay_good)
+        delayed = rng.rand(m) < p
+        short = rng.randint(1, max(1, fl.max_delay // 3) + 1, size=m)
+        long_ = rng.randint(max(1, (fl.max_delay + 1) // 2),
+                            fl.max_delay + 1, size=m)
+        delays = np.where(bad, long_, short).astype(np.int32)
+        delays = np.where(delayed, delays, 1).astype(np.int32)
+        return delayed, delays
+
+
+@register
+class GilbertElliottEnvironment(Environment):
+    name = "gilbert_elliott"
+    aliases = ("ge", "bursty")
+
+    def _make_channel(self, fl):
+        return GilbertElliottChannel(fl)

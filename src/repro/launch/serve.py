@@ -21,6 +21,8 @@ from repro.models.api import build_model
 def batched_decode(model, params, prompts, max_new: int, max_len: int):
     """prompts: (B, P) int32. Greedy decode max_new tokens."""
     cfg = model.cfg
+    assert prompts.ndim == 2 and prompts.shape[1] >= 1, \
+        f"prompts must be (B, P>=1) int32, got {prompts.shape}"
     B, P = prompts.shape
     if cfg.family == "audio":
         fe = jnp.zeros((B, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
@@ -28,11 +30,10 @@ def batched_decode(model, params, prompts, max_new: int, max_len: int):
     else:
         cache = model.init_decode_cache(params, B, max_len)
     step = jax.jit(model.decode_step)
-    # prefill token-by-token (teacher forcing over the prompt)
-    tok = prompts[:, 0]
+    # prefill token-by-token (teacher forcing: only the cache matters)
     for t in range(P - 1):
-        logits, cache = step(params, prompts[:, t],
-                             jnp.full((B,), t, jnp.int32), cache)
+        _, cache = step(params, prompts[:, t],
+                        jnp.full((B,), t, jnp.int32), cache)
     out = [prompts]
     tok = prompts[:, -1]
     for t in range(P - 1, P - 1 + max_new):

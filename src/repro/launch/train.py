@@ -12,12 +12,16 @@ Two modes:
     spans 256 chips.
 
 ``--algorithm`` accepts any name in the server-strategy registry
-(repro.core.strategies) — adding a strategy file extends this launcher
-with no edits here.
+(repro.core.strategies); ``--env`` any name in the environment registry
+(repro.env: bernoulli / gilbert_elliott / bandwidth / trace) and
+``--scenario`` any named environment + config binding
+(repro.env.scenarios) — adding a strategy/environment/scenario file
+extends this launcher with no edits here.
 
 Examples:
   python -m repro.launch.train --arch paper-cnn --rounds 60 --p-limited 0.5
   python -m repro.launch.train --algorithm fedopt --rounds 5
+  python -m repro.launch.train --scenario bursty --rounds 40
   python -m repro.launch.train --arch minitron-8b --pod --rounds 3 --reduced
 """
 from __future__ import annotations
@@ -29,12 +33,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import env as env_mod
 from repro.checkpoint.io import save
 from repro.configs.base import FLConfig, reduced
-from repro.configs.registry import get_arch
+from repro.configs.registry import (environment_names, get_arch,
+                                    get_scenario, scenario_names)
 from repro.core import strategies
-from repro.core.round import init_state, make_round_step, make_train_loop
-from repro.core.scheduler import HeterogeneitySchedule
+from repro.core.round import (as_scan_scheds, init_state, make_round_step,
+                              make_train_loop)
 from repro.core.simulation import FederatedSimulation
 from repro.data.partition import shard_partition
 from repro.data.pipeline import build_clients
@@ -83,14 +89,10 @@ def pod_scale(args, fl: FLConfig):
     strategy = strategies.resolve(fl)
     state = init_state(model, fl, jax.random.PRNGKey(fl.seed), strategy)
     C = fl.cohorts
-    sched_gen = HeterogeneitySchedule(
+    environment = env_mod.resolve(
         fl.with_(num_clients=C, clients_per_round=C))
     batch = _pod_batch(cfg, fl, args)
-    sb = sched_gen.batch(0, args.rounds)
-    scheds = {"limited": jnp.asarray(sb["limited"]),
-              "delayed": jnp.asarray(sb["delayed"]),
-              "delays": jnp.asarray(sb["delays"]),
-              "data_sizes": jnp.ones((args.rounds, C), jnp.float32)}
+    scheds = as_scan_scheds(environment.batch(0, args.rounds))
 
     if args.no_scan:
         step = jax.jit(make_round_step(model, fl, strategy))
@@ -129,6 +131,15 @@ def main():
                     help="reduced model variant (CPU-sized)")
     ap.add_argument("--algorithm", default="ama_fes",
                     choices=strategies.names())
+    ap.add_argument("--env", default="bernoulli", choices=environment_names(),
+                    help="environment (channel/device/participation model)")
+    ap.add_argument("--scenario", default=None, choices=scenario_names(),
+                    help="named environment + config binding; overrides "
+                         "--env and the delay knobs (an explicit "
+                         "--trace-path still wins)")
+    ap.add_argument("--trace-path", default="",
+                    help="trace env: .npz schedule to replay "
+                         "('' = synthetic mobility trace)")
     ap.add_argument("--no-scan", action="store_true",
                     help="pod: per-round jit loop instead of the fused scan")
     ap.add_argument("--use-kernel", action="store_true",
@@ -151,11 +162,17 @@ def main():
     fl = FLConfig(num_clients=args.clients,
                   clients_per_round=max(2, args.clients // 4),
                   local_epochs=2, local_batch_size=25, lr=args.lr,
-                  algorithm=args.algorithm, p_limited=args.p_limited,
+                  algorithm=args.algorithm, env=args.env,
+                  p_limited=args.p_limited,
                   p_delay=args.p_delay, max_delay=args.max_delay,
+                  trace_path=args.trace_path,
                   use_kernel=args.use_kernel,
                   cohorts=args.cohorts, local_steps=args.local_steps,
                   seed=args.seed)
+    if args.scenario:
+        fl = get_scenario(args.scenario).apply(fl)
+        if args.trace_path:       # an explicit recording beats the
+            fl = fl.with_(trace_path=args.trace_path)  # scenario default
     if args.pod:
         pod_scale(args, fl)
     else:

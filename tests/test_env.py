@@ -1,0 +1,259 @@
+"""Environment subsystem: the batch/round bit-identity contract for
+every registered environment, bernoulli == the seed scheduler
+bit-for-bit, scenario registry integrity, trace save/load roundtrip,
+and the fused scan engine consuming every environment unchanged."""
+import jax
+import numpy as np
+import pytest
+
+from repro import env as env_mod
+from repro.configs.base import FLConfig
+from repro.core.scheduler import HeterogeneitySchedule
+from repro.env.scenarios import apply as apply_scenario
+from repro.env.scenarios import names as scenario_names
+from repro.env.trace import save_trace, synth_mobility_trace
+
+# canonical (deduplicated) environment classes under their primary name
+CANONICAL = sorted({cls.name for cls in map(env_mod.get, env_mod.names())})
+
+
+def _fl(**kw):
+    base = dict(num_clients=14, clients_per_round=5, p_limited=0.3,
+                p_delay=0.4, max_delay=6, seed=3)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# THE contract: batch row i == round(t0 + i), for every environment
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", CANONICAL)
+@pytest.mark.parametrize("t0,n", [(0, 4), (9, 7)])
+def test_batch_rows_bit_identical_to_sequential_rounds(name, t0, n):
+    e = env_mod.get(name)(_fl(env=name))
+    got = e.batch(t0, n)
+    assert got["selected"].shape == (n, 5)
+    for i in range(n):
+        rs = e.round(t0 + i)
+        np.testing.assert_array_equal(got["selected"][i], rs.selected)
+        np.testing.assert_array_equal(got["limited"][i], rs.limited)
+        np.testing.assert_array_equal(got["delayed"][i], rs.delayed)
+        np.testing.assert_array_equal(got["delays"][i], rs.delays)
+        np.testing.assert_array_equal(got["data_sizes"][i], rs.data_sizes)
+
+
+@pytest.mark.parametrize("name", CANONICAL)
+def test_batch_independent_of_chunking(name):
+    """Round t is a pure function of (config, t) however the rounds are
+    chunked or ordered — the killer case for stateful channels (the
+    Gilbert-Elliott chain must memoize a trajectory that is pure in t).
+    A FRESH instance queried out of order must agree too."""
+    fl = _fl(env=name)
+    e = env_mod.get(name)(fl)
+    whole = e.batch(0, 12)
+    split = {k: np.concatenate([e.batch(0, 5)[k], e.batch(5, 7)[k]])
+             for k in whole}
+    for k in whole:
+        np.testing.assert_array_equal(whole[k], split[k])
+    fresh = env_mod.get(name)(fl)
+    rs = fresh.round(11)  # first query, deep into the run
+    np.testing.assert_array_equal(whole["delays"][11], rs.delays)
+    np.testing.assert_array_equal(whole["selected"][11], rs.selected)
+
+
+@pytest.mark.parametrize("name", CANONICAL)
+def test_schedule_invariants(name):
+    """Delays live in [1, max_delay], are 1 where on time; selected are
+    valid client ids; limited matches the fixed p_limited subset size
+    at the population level."""
+    fl = _fl(env=name)
+    e = env_mod.get(name)(fl)
+    sb = e.batch(0, 20)
+    assert sb["selected"].min() >= 0
+    assert sb["selected"].max() < fl.num_clients
+    assert sb["delays"].min() >= 1
+    assert sb["delays"].max() <= fl.max_delay
+    np.testing.assert_array_equal(sb["delays"][~sb["delayed"]], 1)
+    assert sb["data_sizes"].dtype == np.float32
+
+
+@pytest.mark.parametrize("name", CANONICAL)
+def test_zero_max_delay_disables_async_path(name):
+    e = env_mod.get(name)(_fl(env=name, max_delay=0))
+    sb = e.batch(0, 6)
+    assert not sb["delayed"].any()
+    np.testing.assert_array_equal(sb["delays"], np.ones((6, 5), np.int32))
+
+
+# ---------------------------------------------------------------------------
+# bernoulli == the seed HeterogeneitySchedule, bit-for-bit
+# ---------------------------------------------------------------------------
+def _seed_reference_round(fl, t, limited_set):
+    """The seed repo's HeterogeneitySchedule.round, inlined verbatim as
+    the frozen historical reference."""
+    rng = np.random.RandomState(fl.seed * 1_000_003 + t)
+    sel = rng.choice(fl.num_clients, size=fl.clients_per_round,
+                     replace=False).astype(np.int32)
+    limited = np.array([i in limited_set for i in sel])
+    if fl.max_delay > 0 and fl.p_delay > 0:
+        delayed = rng.rand(fl.clients_per_round) < fl.p_delay
+        delays = rng.randint(1, fl.max_delay + 1,
+                             size=fl.clients_per_round).astype(np.int32)
+    else:
+        delayed = np.zeros(fl.clients_per_round, bool)
+        delays = np.ones(fl.clients_per_round, np.int32)
+    delays = np.where(delayed, delays, 1).astype(np.int32)
+    return sel, limited, delayed, delays
+
+
+@pytest.mark.parametrize("p_delay,max_delay", [(0.0, 0), (0.4, 5)])
+def test_bernoulli_env_bit_identical_to_seed_scheduler(p_delay, max_delay):
+    fl = _fl(p_delay=p_delay, max_delay=max_delay)
+    e = env_mod.get("bernoulli")(fl)
+    rng = np.random.RandomState(fl.seed)
+    k = int(round(fl.p_limited * fl.num_clients))
+    limited_set = set(rng.choice(fl.num_clients, size=k,
+                                 replace=False).tolist())
+    assert e.devices.limited_set == limited_set
+    for t in [0, 1, 17, 123]:
+        rs = e.round(t)
+        sel, lim, dly, d = _seed_reference_round(fl, t, limited_set)
+        np.testing.assert_array_equal(rs.selected, sel)
+        np.testing.assert_array_equal(rs.limited, lim)
+        np.testing.assert_array_equal(rs.delayed, dly)
+        np.testing.assert_array_equal(rs.delays, d)
+
+
+def test_heterogeneity_schedule_wrapper_delegates_to_bernoulli_env():
+    fl = _fl()
+    hs = HeterogeneitySchedule(fl)
+    e = env_mod.get("bernoulli")(fl)
+    assert hs.limited_set == e.devices.limited_set
+    got, want = hs.batch(2, 5), e.batch(2, 5)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+
+
+# ---------------------------------------------------------------------------
+# components
+# ---------------------------------------------------------------------------
+def test_device_profile_tiers_and_step_budget():
+    fl = _fl(fedprox_partial=0.5)
+    e = env_mod.resolve(fl)
+    sel = np.arange(fl.num_clients, dtype=np.int32)
+    lim = e.devices.limited(sel)
+    assert lim.sum() == int(round(fl.p_limited * fl.num_clients))
+    np.testing.assert_array_equal(e.devices.tier(sel), np.where(lim, 0, 1))
+    budget = e.devices.step_budget(8, sel)
+    np.testing.assert_array_equal(budget[~lim], 8)
+    np.testing.assert_array_equal(budget[lim], 4)
+
+
+def test_data_sizes_flow_through_schedule():
+    fl = _fl()
+    sizes = np.arange(100, 100 + fl.num_clients, dtype=np.float32)
+    e = env_mod.resolve(fl, data_sizes=sizes)
+    rs = e.round(0)
+    np.testing.assert_array_equal(rs.data_sizes, sizes[rs.selected])
+
+
+def test_gilbert_elliott_is_bursty():
+    """Bad-state delays must be temporally correlated: the chance a
+    delayed round is followed by another delayed round for the same
+    client exceeds the marginal delay rate."""
+    fl = FLConfig(num_clients=4, clients_per_round=4, env="gilbert_elliott",
+                  max_delay=10, ge_p_gb=0.1, ge_p_bg=0.2, seed=0)
+    e = env_mod.resolve(fl)
+    sb = e.batch(0, 400)
+    order = np.argsort(sb["selected"], axis=1)
+    by_client = np.take_along_axis(sb["delayed"], order, axis=1)  # (T, K)
+    marginal = by_client.mean()
+    pairs = by_client[:-1] & by_client[1:]
+    cond = pairs.sum() / max(by_client[:-1].sum(), 1)
+    assert cond > marginal + 0.05, (cond, marginal)
+
+
+# ---------------------------------------------------------------------------
+# trace: save/load roundtrip + synthetic mobility
+# ---------------------------------------------------------------------------
+def test_trace_roundtrip_replays_any_environment(tmp_path):
+    fl = _fl(env="gilbert_elliott")
+    recorded = env_mod.resolve(fl).batch(0, 9)
+    path = str(tmp_path / "ge_trace.npz")
+    save_trace(path, recorded)
+    replay = env_mod.resolve(fl.with_(env="trace", trace_path=path))
+    got = replay.batch(0, 9)
+    for k in ("selected", "limited", "delayed", "delays"):
+        np.testing.assert_array_equal(got[k], recorded[k])
+    # the trace loops modulo its length
+    rs = replay.round(9)
+    np.testing.assert_array_equal(rs.selected, recorded["selected"][0])
+
+
+def test_trace_rejects_delays_beyond_config_cap(tmp_path):
+    """Replaying a trace recorded under a larger max_delay would wrap
+    the async ring buffer — the load must fail loudly."""
+    fl = _fl(env="gilbert_elliott", max_delay=15)
+    path = str(tmp_path / "deep.npz")
+    save_trace(path, env_mod.resolve(fl).batch(0, 40))
+    with pytest.raises(AssertionError, match="max_delay"):
+        env_mod.resolve(fl.with_(env="trace", trace_path=path, max_delay=6))
+
+
+def test_synth_mobility_trace_deterministic_and_valid():
+    fl = _fl(env="trace", trace_path="")
+    a = synth_mobility_trace(fl, rounds=30)
+    b = synth_mobility_trace(fl, rounds=30)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    assert a["selected"].shape == (30, fl.clients_per_round)
+    # availability is coverage-gated: selection actually varies over time
+    assert len({tuple(r) for r in a["selected"].tolist()}) > 1
+
+
+# ---------------------------------------------------------------------------
+# scenarios
+# ---------------------------------------------------------------------------
+def test_every_scenario_builds_and_resolves():
+    for name in scenario_names():
+        fl = apply_scenario(FLConfig(num_clients=10, clients_per_round=4),
+                            name)
+        e = env_mod.resolve(fl)
+        rs = e.round(3)
+        assert rs.selected.shape == (4,)
+        assert rs.delays.min() >= 1
+
+
+def test_paper_scenarios_match_fig3_settings():
+    fl = apply_scenario(FLConfig(), "moderate-30")
+    assert (fl.env, fl.p_delay, fl.max_delay) == ("bernoulli", 0.3, 10)
+    fl = apply_scenario(FLConfig(), "severe-70")
+    assert (fl.env, fl.p_delay, fl.max_delay) == ("bernoulli", 0.7, 10)
+
+
+# ---------------------------------------------------------------------------
+# the fused scan engine consumes every environment unchanged
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", CANONICAL)
+def test_train_loop_runs_against_every_environment(name):
+    import jax.numpy as jnp
+
+    from repro.configs.registry import ARCHS
+    from repro.core.round import as_scan_scheds, init_state, make_train_loop
+    from repro.models.api import build_model
+
+    C = 2
+    fl = FLConfig(num_clients=C, clients_per_round=C, env=name,
+                  p_delay=0.5, max_delay=4, lr=0.1, cohorts=C,
+                  local_steps=1, algorithm="ama_fes")
+    model = build_model(ARCHS["paper-cnn"])
+    rng = np.random.RandomState(0)
+    batch = {"image": jnp.asarray(rng.randn(C, 1, 2, 28, 28, 1),
+                                  jnp.float32),
+             "label": jnp.asarray(rng.randint(0, 10, (C, 1, 2)), jnp.int32)}
+    scheds = as_scan_scheds(env_mod.resolve(fl).batch(0, 2))
+    loop = make_train_loop(model, fl, donate=False)
+    state = init_state(model, fl, jax.random.PRNGKey(0))
+    out, metrics = loop(state, batch, scheds)
+    assert np.isfinite(np.asarray(metrics["loss"])).all()
+    assert int(out["t"]) == 2

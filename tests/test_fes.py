@@ -7,7 +7,7 @@ from repro.configs.base import FLConfig, reduced
 from repro.configs.registry import ARCHS
 from repro.core import fes
 from repro.core.client import make_fes_local_train, make_local_train
-from repro.models.api import build_model
+from repro.models.api import CLASSIFIER_KEYS, build_model
 
 
 def _cnn_setup():
@@ -55,6 +55,32 @@ def test_static_fes_equals_masked_fes():
     for a, b in zip(jax.tree.leaves(dyn), jax.tree.leaves(stat)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-6, atol=1e-7)
+
+
+def test_count_trainable_matches_classifier_keys():
+    """count_trainable under the CLASSIFIER_KEYS mask must equal the
+    exact parameter counts of the classifier subtree vs the whole CNN
+    (and numpy is imported at module level, not per call)."""
+    import jax
+
+    _, model, params, _ = _cnn_setup()
+    mask = {k: jax.tree.map(lambda _: k in CLASSIFIER_KEYS, v)
+            for k, v in params.items()}
+    train, total = fes.count_trainable(params, mask)
+    exp_total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    exp_train = sum(int(np.prod(x.shape))
+                    for k, v in params.items() if k in CLASSIFIER_KEYS
+                    for x in jax.tree.leaves(v))
+    assert (train, total) == (exp_train, exp_total)
+    assert 0 < train < total
+    # all-trainable / none-trainable corners
+    ones = jax.tree.map(lambda _: True, params)
+    assert fes.count_trainable(params, ones) == (exp_total, exp_total)
+    zeros = jax.tree.map(lambda _: False, params)
+    assert fes.count_trainable(params, zeros)[0] == 0
+    # the module-level import satellite: no function-local numpy import
+    import inspect
+    assert "import numpy" not in inspect.getsource(fes.count_trainable)
 
 
 def test_fes_mask_covers_transformer_tail():

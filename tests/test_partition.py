@@ -1,0 +1,64 @@
+"""Partitioner properties beyond the defaults: shard_partition must keep
+its exact-cover and <=shards_per_client-classes-per-client guarantees
+for ANY shard count, and dirichlet_partition's concentration parameter
+must actually control skew (hypothesis-guarded like the other property
+tests)."""
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.data.partition import dirichlet_partition, shard_partition
+
+
+@settings(deadline=None, max_examples=25)
+@given(num_clients=st.integers(4, 25), n=st.integers(150, 600),
+       shards=st.integers(1, 4), seed=st.integers(0, 10))
+def test_shard_partition_cover_and_class_budget(num_clients, n, shards, seed):
+    """Exact cover always; <= shards_per_client classes per client in the
+    feasible regime (enough slots for every class to get one)."""
+    rng = np.random.RandomState(seed)
+    labels = rng.randint(0, 10, n)
+    n_classes = int(labels.max()) + 1
+    parts = shard_partition(labels, num_clients, shards_per_client=shards,
+                            seed=seed)
+    assert len(parts) == num_clients
+    all_idx = np.concatenate([p for p in parts if len(p)])
+    assert len(all_idx) == n
+    assert len(set(all_idx.tolist())) == n          # exact cover, no dupes
+    if num_clients * shards >= n_classes:           # feasible regime
+        for idx in parts:
+            assert len(np.unique(labels[idx])) <= shards
+
+
+@settings(deadline=None, max_examples=15)
+@given(num_clients=st.integers(2, 15), alpha=st.floats(0.1, 10.0),
+       seed=st.integers(0, 5))
+def test_dirichlet_partition_cover_any_alpha(num_clients, alpha, seed):
+    rng = np.random.RandomState(seed)
+    labels = rng.randint(0, 10, 400)
+    parts = dirichlet_partition(labels, num_clients, alpha=alpha, seed=seed)
+    all_idx = np.concatenate([p for p in parts if len(p)])
+    assert sorted(all_idx.tolist()) == list(range(400))
+
+
+def test_dirichlet_alpha_controls_skew():
+    """Sanity: small alpha -> concentrated (skewed) clients, large alpha
+    -> near-uniform clients. Measured as the std of per-client sizes."""
+    rng = np.random.RandomState(0)
+    labels = rng.randint(0, 10, 2000)
+
+    def size_std(alpha):
+        parts = dirichlet_partition(labels, 10, alpha=alpha, seed=0)
+        return np.std([len(p) for p in parts])
+
+    assert size_std(0.1) > 2 * size_std(100.0)
+
+
+def test_dirichlet_large_alpha_spreads_classes():
+    rng = np.random.RandomState(1)
+    labels = rng.randint(0, 10, 2000)
+    parts = dirichlet_partition(labels, 8, alpha=100.0, seed=1)
+    for idx in parts:
+        assert len(np.unique(labels[idx])) == 10   # every client sees all
