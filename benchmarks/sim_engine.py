@@ -1,0 +1,107 @@
+"""Paper-scale end-to-end engine throughput: chunked scan vs per-round loop.
+
+Runs the full §V simulation path (real chunk staging, schedules from the
+environment registry, jitted batched eval at the ``eval_every`` cadence)
+through both configurations of the unified execution engine — the fused
+chunked ``lax.scan`` and the bit-identical per-round-jit fallback — and
+reports steady-state rounds/sec. Emits a machine-readable
+``BENCH_sim_engine.json`` at the repo root so the perf trajectory of the
+simulation path is tracked from PR 3 onward.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.configs.base import FLConfig
+from repro.configs.registry import ARCHS
+from repro.core.simulation import FederatedSimulation
+from repro.data.partition import shard_partition
+from repro.data.pipeline import build_clients
+from repro.data.synth import make_image_classification
+from repro.models.api import build_model
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                   "BENCH_sim_engine.json")
+
+
+def _world(n_train: int, n_clients: int, seed: int = 0):
+    train, test = make_image_classification(n_train=n_train, n_test=400,
+                                            seed=seed)
+    clients = build_clients(
+        train, shard_partition(train["label"], n_clients, seed=seed))
+    return build_model(ARCHS["paper-cnn"]), clients, test
+
+
+def _timed_pass(sim, rounds: int, eval_every: int) -> tuple[float, float]:
+    t0 = time.time()
+    hist = sim.run(rounds=rounds, eval_every=eval_every)
+    return time.time() - t0, hist.train_loss[-1]
+
+
+def _measure(model, fl, clients, test, *, rounds: int, eval_every: int,
+             reps: int) -> tuple[dict, dict]:
+    """Best-of-``reps`` per mode, modes ALTERNATED pass-by-pass so host
+    contention (shared CI/container CPUs) hits both engines alike."""
+    sims = {m: FederatedSimulation(model, fl, clients, test,
+                                   use_scan=(m == "chunked_scan"))
+            for m in ("per_round_loop", "chunked_scan")}
+    for sim in sims.values():                    # compile + warm both
+        sim.run(rounds=eval_every, eval_every=eval_every)
+    best, loss = {m: float("inf") for m in sims}, {}
+    for rep in range(reps):
+        for m, sim in sims.items():
+            dt, tl = _timed_pass(sim, rounds, eval_every)
+            best[m] = min(best[m], dt)
+            if rep == 0:          # fixed pass: reps don't move the loss
+                loss[m] = tl
+    out = {}
+    for m, sim in sims.items():
+        out[m] = {"rounds": rounds, "seconds": round(best[m], 3),
+                  "rounds_per_sec": round(rounds / best[m], 3),
+                  "per_round_ms": round(best[m] / rounds * 1e3, 2),
+                  # loss after warmup + first timed pass; the sim keeps
+                  # training across reps (cumulative_rounds in total)
+                  "train_loss_after_first_pass": round(loss[m], 4),
+                  "cumulative_rounds": sim.t}
+    return out["chunked_scan"], out["per_round_loop"]
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    rounds = 4 if smoke else (8 if quick else 24)
+    eval_every = 2 if smoke else 4
+    reps = 1 if smoke else 3
+    n_train, n_clients = (400, 10) if smoke else (1500, 20)
+    model, clients, test = _world(n_train, n_clients)
+    fl = FLConfig(num_clients=n_clients,
+                  clients_per_round=max(2, n_clients // 4),
+                  local_epochs=2, local_batch_size=25, lr=0.1,
+                  algorithm="ama_fes", seed=0)
+
+    scan, loop = _measure(model, fl, clients, test, rounds=rounds,
+                          eval_every=eval_every, reps=reps)
+
+    rec = {"bench": "sim_engine", "scale": "paper",
+           "arch": "paper-cnn", "algorithm": fl.algorithm,
+           "n_train": n_train, "n_clients": n_clients,
+           "clients_per_round": fl.clients_per_round,
+           "eval_every": eval_every,
+           "chunked_scan": scan, "per_round_loop": loop,
+           "speedup": round(scan["rounds_per_sec"]
+                            / max(loop["rounds_per_sec"], 1e-9), 3)}
+    print(f"sim_engine.loop_rounds_per_sec,{loop['rounds_per_sec']},")
+    print(f"sim_engine.scan_rounds_per_sec,{scan['rounds_per_sec']},")
+    print(f"sim_engine.speedup,{rec['speedup']},x chunked scan over "
+          f"per-round loop ({rounds} rounds, eval_every={eval_every})")
+    if not smoke:
+        with open(OUT, "w") as f:
+            json.dump(rec, f, indent=2)
+            f.write("\n")
+        print(f"wrote {os.path.normpath(OUT)}")
+    return rec
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--full" not in sys.argv, smoke="--smoke" in sys.argv)

@@ -2,7 +2,10 @@
 
 Trains the paper's 2-conv/3-FC CNN federatedly over 20 non-iid clients
 (2-class shards) with AMA aggregation + FES computation reduction, then
-compares against naive FedAvg. Runs in ~1 min on CPU.
+compares against naive FedAvg — on the unified chunked-scan execution
+engine: each ``eval_every`` chunk of rounds is ONE fused ``lax.scan``
+program, batches staged in one gather with the next chunk prefetched
+host-side, eval jitted and batched. Runs in ~1 min on CPU.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,6 +17,7 @@ from repro.core.simulation import FederatedSimulation
 from repro.data.partition import shard_partition
 from repro.data.pipeline import build_clients
 from repro.data.synth import make_image_classification
+from repro.launch.mesh import engine_mesh
 from repro.models.api import build_model
 
 
@@ -26,16 +30,24 @@ def main():
     # 2. model: the paper's CNN (Section V)
     model = build_model(ARCHS["paper-cnn"])
 
-    # 3. federated training: AMA-FES vs naive FL
+    # 3. federated training: AMA-FES vs naive FL, both on the fused
+    #    chunked-scan engine under the FL mesh (degenerate on CPU; the
+    #    identical program shards the client axis on a pod)
     for algo in ("ama_fes", "fedavg"):
         fl = FLConfig(num_clients=20, clients_per_round=5, local_epochs=2,
                       local_batch_size=25, lr=0.1, p_limited=0.5,
                       algorithm=algo, seed=0)
-        sim = FederatedSimulation(model, fl, clients, test)
+        sim = FederatedSimulation(model, fl, clients, test,
+                                  mesh=engine_mesh(fl.clients_per_round))
+        # eval_every=1 keeps one test_acc entry per round (the paper's
+        # metric windows); raise it to trade eval cadence for speed —
+        # the scan chunk length follows it
         hist = sim.run(rounds=60)
         print(f"{algo:8s}: accuracy={np.mean(hist.test_acc[-5:]):.3f}  "
               f"stability_var={hist.stability_variance(20):.2f}  "
               f"(lower var = more stable)")
+        # sim.save("quickstart.npz") would checkpoint {params, t, aux};
+        # sim.resume(...) continues bit-identically.
 
 
 if __name__ == "__main__":

@@ -1,4 +1,13 @@
-"""Checkpointing: flat-key npz save/restore for param/opt/queue pytrees."""
+"""Checkpointing: flat-key npz save/restore for param/opt/queue pytrees
+and the engine's full round state ``{params, t, aux}``.
+
+Writes are atomic (tmp file + rename), so a checkpoint taken mid-run
+can never be half-written; ``save_state``/``restore_state`` round-trip
+the WHOLE round carry — global params, the round index ``t`` and the
+strategy aux state (async-AMA ring buffer, fedopt Adam moments, ...) —
+bit-identically, which is what makes ``--resume`` continuation exact
+(tests/test_engine.py proves the save→restore→continue identity).
+"""
 from __future__ import annotations
 
 import os
@@ -23,14 +32,21 @@ def _flatten(tree, prefix=""):
     return out
 
 
+def _with_npz(path: str) -> str:
+    return path if path.endswith(".npz") else path + ".npz"
+
+
 def save(path: str, tree) -> None:
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path, **_flatten(tree))
+    final = _with_npz(path)
+    os.makedirs(os.path.dirname(os.path.abspath(final)), exist_ok=True)
+    tmp = final + ".tmp.npz"           # .npz suffix: savez won't rename it
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, final)
 
 
 def restore(path: str, like):
     """Restore into the structure of ``like`` (dtypes preserved from disk)."""
-    with np.load(path) as zf:
+    with np.load(_with_npz(path)) as zf:
         flat = dict(zf)
 
     def rebuild(tree, prefix=""):
@@ -44,3 +60,25 @@ def restore(path: str, like):
             if hasattr(tree, "dtype") else jax.numpy.asarray(leaf)
 
     return rebuild(like)
+
+
+def save_state(path: str, state: dict) -> None:
+    """Checkpoint a full round state ``{params, t, aux}`` (any strategy:
+    the aux pytree carries ring buffers / moments / {} unchanged)."""
+    missing = {"params", "t"} - set(state)
+    if missing:
+        raise ValueError(f"round state missing keys: {sorted(missing)}")
+    save(path, state)
+
+
+def restore_state(path: str, like_state: dict) -> dict:
+    """Restore a full round state into the structure of ``like_state``
+    (use ``core.round.init_state`` to build the template)."""
+    with np.load(_with_npz(path)) as zf:
+        keys = set(zf.files)
+    if "t" not in keys or not any(k.startswith("params/") for k in keys):
+        raise ValueError(
+            f"{path} is not a full round-state checkpoint "
+            "({params, t, aux} — e.g. a params-only file from an older "
+            "save); re-save with save_state / --checkpoint")
+    return restore(path, like_state)

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from repro.configs.base import FLConfig
 from repro.core import strategies
 from repro.core.client import make_fes_local_train, make_local_train
+from repro.sharding.ctx import constrain_leading
 
 
 def as_scan_scheds(sb: dict) -> dict:
@@ -69,8 +70,11 @@ def make_round_step(model, fl: FLConfig, strategy=None):
     def round_step(state, batch, sched):
         t = state["t"]
         prev_global = state["params"]
+        # stacked client axis over the FL mesh ("client"); no-op off-mesh
+        batch = constrain_leading(batch, "client")
         client_params, losses = local_train(prev_global, batch,
                                             sched["limited"])
+        client_params = constrain_leading(client_params, "client")
         new_params, aux = strategy.aggregate(t, prev_global, client_params,
                                              sched, state["aux"])
         on_time = jnp.logical_not(sched["delayed"])

@@ -1,120 +1,30 @@
 """Paper-scale federated simulation (K clients, m selected/round).
 
-Drives the same jitted round engine as the pod path, but with the full
-heterogeneous environment of §V: non-iid 2-class shards, a fixed
-computing-limited subset (FES), and stochastic upload delays. Both
-halves are plugins: the server rule is a ServerStrategy from
-``repro.core.strategies`` and the world is an Environment from
-``repro.env`` (``fl.env``: bernoulli / gilbert_elliott / bandwidth /
-trace) — the simulation owns no algorithm or channel logic, only data
-movement and evaluation.
+``FederatedSimulation`` is the paper-scale configuration of the unified
+chunked-scan execution engine (``repro.exec``): the same fused
+``make_train_loop`` round path, vectorized chunk staging, jitted batched
+eval and FL-mesh sharding that drive the pod scale, here fed from K
+simulated clients' non-iid shards with the full heterogeneous
+environment of §V. Both halves are plugins: the server rule is a
+ServerStrategy from ``repro.core.strategies`` and the world is an
+Environment from ``repro.env`` (``fl.env``: bernoulli / gilbert_elliott
+/ bandwidth / trace) — the simulation owns no algorithm or channel
+logic, only data movement and evaluation.
+
+Kept as an import point for backwards compatibility; the implementation
+lives in ``repro.exec.engine``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from repro.exec.engine import History, SimulationEngine
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import env as env_mod
-from repro.configs.base import FLConfig
-from repro.core import strategies
-from repro.core.client import make_local_train
+__all__ = ["FederatedSimulation", "History"]
 
 
-@dataclass
-class History:
-    test_acc: list = field(default_factory=list)
-    test_loss: list = field(default_factory=list)
-    train_loss: list = field(default_factory=list)
+class FederatedSimulation(SimulationEngine):
+    """The paper's §V experiment on the unified execution engine.
 
-    def stability_variance(self, last: int = 50) -> float:
-        """Paper's stability metric: variance of test accuracy over the
-        last ``last`` rounds (in percentage points squared)."""
-        accs = np.array(self.test_acc[-last:]) * 100.0
-        return float(np.var(accs))
-
-    def final_accuracy(self, last: int = 50) -> float:
-        return float(np.mean(self.test_acc[-last:]))
-
-
-class FederatedSimulation:
-    def __init__(self, model, fl: FLConfig, clients, test_data,
-                 eval_fn=None, eval_batch: int = 512, environment=None):
-        self.model = model
-        self.fl = fl
-        self.clients = clients
-        self.test_data = test_data
-        # any registered environment (fl.env); data sizes feed the
-        # |D_i| aggregation weights through the schedule contract
-        self.env = environment or env_mod.resolve(
-            fl, data_sizes=np.array([len(c) for c in clients], np.float32))
-        self.rng = np.random.RandomState(fl.seed + 7)
-        self.strategy = strategies.resolve(fl)
-        self._local_train = jax.jit(make_local_train(model, fl,
-                                                     self.strategy))
-        self._aggregate = jax.jit(self.strategy.aggregate)
-        self._eval_fn = eval_fn
-        self.eval_batch = eval_batch
-
-        self.params = model.init(jax.random.PRNGKey(fl.seed))
-        self.t = 0
-        self.aux = self.strategy.init_state(self.params)
-
-    # ------------------------------------------------------------------
-    def _steps_per_round(self) -> int:
-        n_min = min(len(c) for c in self.clients)
-        per_epoch = max(1, n_min // self.fl.local_batch_size)
-        return self.fl.local_epochs * per_epoch
-
-    def run_round(self) -> float:
-        fl = self.fl
-        rs = self.env.round(self.t)
-        steps = self._steps_per_round()
-        batches = [self.clients[i].sample_steps(self.rng, steps,
-                                                fl.local_batch_size)
-                   for i in rs.selected]
-        batches = {k: np.stack([b[k] for b in batches]) for k in batches[0]}
-        sched = {
-            "limited": jnp.asarray(rs.limited),
-            "delayed": jnp.asarray(rs.delayed),
-            "delays": jnp.asarray(rs.delays),
-            "data_sizes": jnp.asarray(rs.data_sizes, jnp.float32),
-        }
-
-        client_params, losses = self._local_train(self.params, batches,
-                                                  sched["limited"])
-        self.params, self.aux = self._aggregate(
-            jnp.int32(self.t), self.params, client_params, sched, self.aux)
-        self.t += 1
-        return float(jnp.mean(losses))
-
-    # ------------------------------------------------------------------
-    def evaluate(self):
-        if self._eval_fn is None:
-            from repro.models import cnn
-            logits, _ = cnn.forward(self.params, self.model.cfg,
-                                    self.test_data)
-            labels = self.test_data["label"]
-            acc = float(jnp.mean((jnp.argmax(logits, -1) == labels)))
-            from repro.models.layers import cross_entropy_loss
-            loss = float(cross_entropy_loss(logits, labels))
-            return acc, loss
-        return self._eval_fn(self.params, self.test_data)
-
-    def run(self, rounds: int | None = None, eval_every: int = 1,
-            verbose: bool = False) -> History:
-        hist = History()
-        rounds = rounds or self.fl.rounds
-        for r in range(rounds):
-            tl = self.run_round()
-            hist.train_loss.append(tl)
-            if (r + 1) % eval_every == 0:
-                acc, loss = self.evaluate()
-                hist.test_acc.append(acc)
-                hist.test_loss.append(loss)
-                if verbose and (r + 1) % 10 == 0:
-                    print(f"  round {r+1:4d} train_loss={tl:.4f} "
-                          f"test_acc={acc:.4f}")
-        return hist
+    ``run`` routes through the fused chunked scan by default
+    (``use_scan=False`` for the bit-identical per-round fallback);
+    ``save``/``resume`` checkpoint the whole round state.
+    """

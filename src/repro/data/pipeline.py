@@ -1,5 +1,26 @@
-"""Client data pipeline: per-round local batch sampling."""
+"""Client data pipeline: per-round sampling + the vectorized chunk stager.
+
+The execution engine consumes data in CHUNKS of rounds: one fancy-gather
+produces the whole ``(n_rounds, C, steps, b, ...)`` batch tensor a
+``per_round_batch`` scan needs, replacing the per-client/per-round
+Python staging loops. Index computation is host-side numpy (cheap); the
+gather touches the actual sample arrays exactly once per chunk.
+
+THE STAGING CONTRACT (mirrors the ``Environment`` schedule contract):
+round t's batch indices are a pure function of (seed, t, selected[t]) —
+``stage_chunk(t0, n)`` row i is bit-identical to staging round t0+i on
+its own. Chunked execution, the per-round fallback and a resumed run
+therefore all see the same sample stream.
+
+``ChunkPrefetcher`` overlaps host staging with device execution: a
+single worker thread stages chunk k+1 while chunk k runs on device
+(depth-1 double buffering, so stateful environments are never entered
+concurrently).
+"""
 from __future__ import annotations
+
+import queue
+import threading
 
 import numpy as np
 
@@ -14,19 +35,128 @@ class ClientDataset:
     def __len__(self):
         return len(self.indices)
 
-    def sample_steps(self, rng: np.random.RandomState, steps: int,
-                     batch_size: int):
-        """(steps, batch, ...) arrays, sampling with reshuffled epochs."""
+    def sample_step_indices(self, rng: np.random.RandomState, steps: int,
+                            batch_size: int) -> np.ndarray:
+        """(steps, batch) GLOBAL sample indices, reshuffled-epoch order."""
         n = len(self.indices)
         need = steps * batch_size
         reps = int(np.ceil(need / max(n, 1)))
-        idx = np.concatenate([rng.permutation(self.indices) for _ in range(reps)])
-        idx = idx[:need].reshape(steps, batch_size)
+        idx = np.concatenate([rng.permutation(self.indices)
+                              for _ in range(reps)])
+        return idx[:need].reshape(steps, batch_size)
+
+    def sample_steps(self, rng: np.random.RandomState, steps: int,
+                     batch_size: int):
+        """(steps, batch, ...) arrays, sampling with reshuffled epochs."""
+        idx = self.sample_step_indices(rng, steps, batch_size)
         return {k: v[idx] for k, v in self.data.items()}
 
 
 def build_clients(data: dict, partition: list[np.ndarray]) -> list[ClientDataset]:
     return [ClientDataset(data, idx) for idx in partition]
+
+
+# --------------------------------------------------------------------------
+# chunked staging (the engine's data plane)
+# --------------------------------------------------------------------------
+
+def stage_rng(seed: int, t: int) -> np.random.RandomState:
+    """Round t's batch-sampling stream — independent per round, keyed on
+    the absolute round index (cf. ``env.base.round_rng``), so staging is
+    pure in t and survives chunking/resume unchanged."""
+    return np.random.RandomState(
+        (seed * 1_000_003 + t + 0x51ED270) % 2**32)
+
+
+def stage_round_indices(clients: list[ClientDataset], selected: np.ndarray,
+                        seed: int, t: int, steps: int,
+                        batch_size: int) -> np.ndarray:
+    """(C, steps, batch) global indices for round t's selected clients."""
+    rng = stage_rng(seed, t)
+    return np.stack([clients[int(i)].sample_step_indices(rng, steps,
+                                                         batch_size)
+                     for i in selected])
+
+
+def stage_chunk(data: dict, clients: list[ClientDataset],
+                selected: np.ndarray, seed: int, t0: int, steps: int,
+                batch_size: int) -> dict:
+    """Stage a whole chunk of rounds with ONE gather per data field.
+
+    selected: (n_rounds, C) client indices (``Environment.batch`` rows).
+    Returns {field: (n_rounds, C, steps, batch, ...)} numpy arrays —
+    exactly the ``per_round_batch`` layout ``make_train_loop`` scans
+    over. Row i is bit-identical to staging round ``t0 + i`` alone.
+    """
+    selected = np.asarray(selected)
+    idx = np.stack([stage_round_indices(clients, selected[i], seed, t0 + i,
+                                        steps, batch_size)
+                    for i in range(selected.shape[0])])
+    return {k: v[idx] for k, v in data.items()}
+
+
+class ChunkPrefetcher:
+    """Stage chunk k+1 on a host thread while chunk k runs on device.
+
+    ``fn(item)`` is called on a SINGLE worker thread in item order (so
+    stateful environments and shared RNG-free staging are safe); at most
+    ``depth`` staged chunks are buffered ahead of the consumer.
+    """
+
+    def __init__(self, fn, items, depth: int = 1):
+        self._q = queue.Queue(maxsize=max(depth, 1))
+        self._n = len(items)
+        self._stop = threading.Event()
+
+        def put(item) -> bool:
+            while not self._stop.is_set():      # closed consumers release
+                try:                            # the worker (no leaked
+                    self._q.put(item, timeout=0.1)   # thread/chunk buffer)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def work():
+            for it in items:
+                if self._stop.is_set():
+                    return
+                try:
+                    staged = (fn(it), None)
+                except Exception as e:          # surface on the consumer side
+                    put((None, e))
+                    return
+                if not put(staged):
+                    return
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _drain(self) -> None:
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                return
+
+    def close(self) -> None:
+        """Stop staging and drop buffered chunks (abandoned iteration)."""
+        self._stop.set()
+        self._drain()
+        # an in-flight put can land after the first drain; once the
+        # worker observes the stop flag and exits, drain what it left
+        self._thread.join(timeout=1.0)
+        self._drain()
+
+    def __iter__(self):
+        try:
+            for _ in range(self._n):
+                out, err = self._q.get()
+                if err is not None:
+                    raise err
+                yield out
+        finally:
+            self.close()
 
 
 def batch_iterator(data: dict, batch_size: int, seed: int = 0):

@@ -1,0 +1,12 @@
+"""Unified chunked-scan execution engine: one sharded data plane +
+round path serving both the paper-scale simulation and the pod scale.
+
+``ChunkRunner`` is the round path (fused scan per chunk, per-round
+fallback); ``SimulationEngine`` the paper-scale configuration on top of
+it; ``Evaluator``/``make_eval_step`` the shared jitted eval layer.
+"""
+from repro.exec.engine import ChunkRunner, History, SimulationEngine
+from repro.exec.evals import Evaluator, make_eval_step
+
+__all__ = ["ChunkRunner", "History", "SimulationEngine", "Evaluator",
+           "make_eval_step"]

@@ -1,0 +1,257 @@
+"""The unified chunked-scan execution engine.
+
+One engine, two configurations — the paper-scale §V simulation
+(K simulated clients, real per-client data staged per round) and the
+pod-scale cohort run (C cohorts over the FL mesh) are the SAME round
+path with a different data plane:
+
+  * ``ChunkRunner`` drives rounds in chunks through the fused
+    ``core.round.make_train_loop`` scan (donated carry, one XLA dispatch
+    per chunk), with a ``use_scan=False`` per-round-jit fallback that is
+    bit-identical (the ``--no-scan`` safety net — see
+    tests/test_engine.py);
+  * ``SimulationEngine`` adds the vectorized data plane
+    (``data.pipeline.stage_chunk`` — one fancy-gather per chunk of
+    rounds, next chunk prefetched host-side while the current chunk runs
+    on device), the jitted batched eval (``exec.evals.Evaluator``) at an
+    ``eval_every`` cadence, full round-state checkpointing
+    ({params, t, aux}: async ring buffer, fedopt moments, ...) and the
+    ``History`` stability metrics;
+  * both run under the FL mesh (``launch.mesh.engine_mesh``) so the
+    stacked client axis of params and batches is sharded on a pod and a
+    degenerate no-op on this CPU container — the identical program at
+    both scales.
+
+Everything round-path-schedulable comes in through the two registries:
+the server rule is a ``ServerStrategy``, the world an ``Environment``;
+the engine owns only data movement, chunking and evaluation.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import env as env_mod
+from repro.checkpoint.io import restore_state, save_state
+from repro.configs.base import FLConfig
+from repro.core import strategies
+from repro.core.round import (as_scan_scheds, init_state, make_round_step,
+                              make_train_loop)
+from repro.data.pipeline import ChunkPrefetcher, stage_chunk
+from repro.exec.evals import Evaluator
+
+
+@dataclass
+class History:
+    test_acc: list = field(default_factory=list)
+    test_loss: list = field(default_factory=list)
+    train_loss: list = field(default_factory=list)
+
+    def stability_variance(self, last: int = 50) -> float:
+        """Paper's stability metric: variance of test accuracy over the
+        last ``last`` rounds (in percentage points squared)."""
+        accs = np.array(self.test_acc[-last:]) * 100.0
+        return float(np.var(accs))
+
+    def final_accuracy(self, last: int = 50) -> float:
+        return float(np.mean(self.test_acc[-last:]))
+
+
+class ChunkRunner:
+    """The unified round path: N rounds per call, fused scan or fallback.
+
+    ``per_round_batch=True`` (paper scale) scans a fresh
+    (n, C, steps, b, ...) batch row per round; ``False`` (pod scale)
+    re-feeds one (C, steps, b, ...) batch every round. ``use_scan=False``
+    replays the identical rounds through a per-round-jit loop — the
+    numerically-equivalent ``--no-scan`` configuration. A mesh makes the
+    engine span a pod: the call runs under it, activating the
+    stacked-client-axis constraints inside ``make_round_step``.
+    """
+
+    def __init__(self, model, fl: FLConfig, strategy=None, *,
+                 per_round_batch: bool = True, use_scan: bool = True,
+                 mesh=None, donate: bool = True):
+        self.model, self.fl = model, fl
+        self.strategy = strategy or strategies.resolve(fl)
+        self.per_round_batch = per_round_batch
+        self.use_scan = use_scan
+        self.mesh = mesh
+        self._loop = None        # fused scan program (built on first use)
+        self._step = None        # per-round fallback program
+        self._donate = donate
+
+    def _ctx(self):
+        return self.mesh if self.mesh is not None else (
+            contextlib.nullcontext())
+
+    def run_chunk(self, state, batch, sched_batch: dict, *,
+                  scan_ok: bool = True):
+        """(state, batch, Environment.batch dict) -> (state, metrics).
+
+        ``batch`` leaves: (n, C, steps, b, ...) when per_round_batch
+        else (C, steps, b, ...); numpy or device arrays. ``metrics``
+        come back as numpy arrays with a leading (n,) axis.
+        ``scan_ok=False`` routes an off-cadence chunk (a tail shorter
+        than ``eval_every``, a standalone single round) through the
+        bit-identical per-round step instead of compiling a fresh
+        scan program for its one-off length.
+        """
+        scheds = as_scan_scheds(sched_batch)
+        n = int(jax.tree.leaves(scheds)[0].shape[0])
+        batch = jax.tree.map(jnp.asarray, batch)
+        with self._ctx():
+            if self.use_scan and scan_ok:
+                if self._loop is None:
+                    self._loop = make_train_loop(
+                        self.model, self.fl, self.strategy,
+                        per_round_batch=self.per_round_batch,
+                        donate=self._donate)
+                state, metrics = self._loop(state, batch, scheds)
+            else:
+                if self._step is None:
+                    self._step = jax.jit(make_round_step(
+                        self.model, self.fl, self.strategy))
+                rows = []
+                for r in range(n):
+                    b = (jax.tree.map(lambda x: x[r], batch)
+                         if self.per_round_batch else batch)
+                    sc = jax.tree.map(lambda x: x[r], scheds)
+                    state, m = self._step(state, b, sc)
+                    rows.append(m)
+                metrics = {k: jnp.stack([m[k] for m in rows])
+                           for k in rows[0]}
+        return state, jax.tree.map(np.asarray, metrics)
+
+
+class SimulationEngine:
+    """Paper-scale federated simulation on the chunked-scan engine.
+
+    Drives ``eval_every``-round chunks through ``ChunkRunner`` over any
+    registered environment: schedules from ``Environment.batch``, client
+    batches staged in one gather per chunk (``stage_chunk``) with the
+    next chunk prefetched host-side, eval through the jitted batched
+    ``Evaluator``. ``use_scan=False`` is the per-round fallback
+    (bit-identical; the refactor's safety net).
+    """
+
+    def __init__(self, model, fl: FLConfig, clients, test_data,
+                 eval_fn=None, eval_batch: int = 512, environment=None,
+                 use_scan: bool = True, mesh=None, prefetch: bool = True,
+                 donate: bool = True):
+        self.model = model
+        self.fl = fl
+        self.clients = clients
+        self.test_data = test_data
+        # any registered environment (fl.env); data sizes feed the
+        # |D_i| aggregation weights through the schedule contract
+        self.env = environment or env_mod.resolve(
+            fl, data_sizes=np.array([len(c) for c in clients], np.float32))
+        self.strategy = strategies.resolve(fl)
+        # donate=True updates the carry in place on accelerator backends,
+        # which also invalidates params references held from BEFORE a
+        # run() call; pass False to keep pre-run references alive there
+        self.runner = ChunkRunner(model, fl, self.strategy,
+                                  per_round_batch=True, use_scan=use_scan,
+                                  mesh=mesh, donate=donate)
+        self._eval_fn = eval_fn
+        self._evaluator = (None if eval_fn is not None
+                           else Evaluator(model, test_data, eval_batch))
+        self.prefetch = prefetch
+        self.data = clients[0].data      # shared sample store (one gather)
+        if any(c.data is not self.data for c in clients):
+            raise ValueError(
+                "the chunked data plane stages every client from ONE "
+                "shared sample store (build clients with "
+                "data.pipeline.build_clients(data, partition))")
+        self.state = init_state(model, fl, jax.random.PRNGKey(fl.seed),
+                                self.strategy)
+
+    # engine state — the full round carry {params, t, aux} ---------------
+    @property
+    def params(self):
+        return self.state["params"]
+
+    @property
+    def t(self) -> int:
+        return int(self.state["t"])
+
+    @property
+    def aux(self):
+        return self.state["aux"]
+
+    def save(self, path: str) -> None:
+        """Checkpoint the WHOLE round state (params, round index, aux:
+        async ring buffer, fedopt moments, ...)."""
+        save_state(path, self.state)
+
+    def resume(self, path: str) -> None:
+        """Bit-identical continuation: restore {params, t, aux}; staging
+        and schedules are pure in t, so the next chunk starts exactly
+        where the checkpointed run left off."""
+        self.state = restore_state(path, self.state)
+
+    # ------------------------------------------------------------------
+    def _steps_per_round(self) -> int:
+        n_min = min(len(c) for c in self.clients)
+        per_epoch = max(1, n_min // self.fl.local_batch_size)
+        return self.fl.local_epochs * per_epoch
+
+    def _stage(self, t0: int, n: int):
+        sb = self.env.batch(t0, n)
+        batch = stage_chunk(self.data, self.clients, sb["selected"],
+                            self.fl.seed, t0, self._steps_per_round(),
+                            self.fl.local_batch_size)
+        return sb, batch
+
+    def run_round(self) -> float:
+        """One round through the engine (a chunk of 1; per-round step —
+        no one-off scan program for a standalone round)."""
+        sb, batch = self._stage(self.t, 1)
+        self.state, metrics = self.runner.run_chunk(self.state, batch, sb,
+                                                    scan_ok=False)
+        return float(metrics["loss"][0])
+
+    def evaluate(self) -> tuple[float, float]:
+        if self._eval_fn is not None:
+            return self._eval_fn(self.state["params"], self.test_data)
+        return self._evaluator(self.state["params"])
+
+    def run(self, rounds: int | None = None, eval_every: int = 1,
+            verbose: bool = False) -> History:
+        hist = History()
+        rounds = rounds or self.fl.rounds
+        t0, end = self.t, self.t + rounds
+        # chunk boundaries sit on ABSOLUTE multiples of eval_every, so a
+        # resumed run evaluates at the same global rounds as the
+        # uninterrupted run it continues (off-cadence head/tail chunks
+        # replay through the per-round step, no one-off scan compile)
+        chunks, t = [], t0
+        while t < end:
+            n = min((t // eval_every + 1) * eval_every, end) - t
+            chunks.append((t, n))
+            t += n
+        staged = (ChunkPrefetcher(lambda c: self._stage(*c), chunks)
+                  if self.prefetch else (self._stage(*c) for c in chunks))
+        try:
+            for (t, n), (sb, batch) in zip(chunks, staged):
+                self.state, metrics = self.runner.run_chunk(
+                    self.state, batch, sb, scan_ok=(n == eval_every))
+                hist.train_loss.extend(float(x) for x in metrics["loss"])
+                if (t + n) % eval_every == 0:    # partial chunks: no eval
+                    acc, loss = self.evaluate()
+                    hist.test_acc.append(acc)
+                    hist.test_loss.append(loss)
+                    done = t + n - t0
+                    if verbose and done % 10 == 0:
+                        print(f"  round {done:4d} "
+                              f"train_loss={hist.train_loss[-1]:.4f} "
+                              f"test_acc={acc:.4f}")
+        finally:
+            if isinstance(staged, ChunkPrefetcher):
+                staged.close()           # abandoned mid-run: release the
+        return hist                      # worker + buffered chunks

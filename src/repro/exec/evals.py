@@ -1,0 +1,78 @@
+"""Jitted, batched, model-generic evaluation (the engine's eval layer).
+
+Replaces the unjitted CNN-hardcoded full-test-set ``evaluate``: one
+compiled program scans fixed-size test batches and accumulates exact
+per-example sums (correct predictions, negative log-likelihood, count),
+so accuracy/loss are independent of the batch split and a single device
+dispatch per eval. Works for any model whose ``forward`` returns
+``(logits, aux)`` with labels of shape ``logits.shape[:-1]`` — the
+paper CNN's (B, classes) and token-level (B, S, V) heads alike.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_eval_step(model):
+    """Returns jitted eval(params, batches, mask) -> (correct, nll, n).
+
+    batches: pytree with leading (n_batches, batch, ...) axes;
+    mask: (n_batches, batch) — 0 for padding examples. The whole test
+    set is consumed by ONE ``lax.scan`` dispatch; sums come back exact.
+    """
+
+    def eval_batch(params, batch, mask):
+        logits, _ = model.forward(params, batch)
+        labels = batch["label"]
+        lf = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(lf, axis=-1)
+        iota = jax.lax.broadcasted_iota(labels.dtype, lf.shape, lf.ndim - 1)
+        gold = jnp.sum(jnp.where(iota == labels[..., None], lf, 0.0), -1)
+        nll = logz - gold
+        hit = (jnp.argmax(lf, -1) == labels).astype(jnp.float32)
+        m = jnp.broadcast_to(
+            mask.reshape(mask.shape + (1,) * (labels.ndim - mask.ndim)),
+            labels.shape).astype(jnp.float32)
+        return jnp.sum(hit * m), jnp.sum(nll * m), jnp.sum(m)
+
+    def eval_all(params, batches, mask):
+        def body(acc, xs):
+            b, m = xs
+            c, l, n = eval_batch(params, b, m)
+            return (acc[0] + c, acc[1] + l, acc[2] + n), None
+
+        zero = jnp.float32(0.0)
+        (c, l, n), _ = jax.lax.scan(body, (zero, zero, zero),
+                                    (batches, mask))
+        return c, l, n
+
+    return jax.jit(eval_all)
+
+
+class Evaluator:
+    """Pads + batches a test set once, then evaluates params repeatedly.
+
+    ``__call__(params) -> (accuracy, mean_loss)`` — exact means over the
+    original (unpadded) examples, shared by the paper-scale simulation
+    and the pod path alike.
+    """
+
+    def __init__(self, model, test_data: dict, batch_size: int = 512):
+        n = len(next(iter(test_data.values())))
+        bs = min(batch_size, n)
+        nb = int(np.ceil(n / bs))
+        idx = np.arange(nb * bs) % n          # wrap-pad; padding is masked
+        self._batches = {
+            k: jnp.asarray(np.asarray(v)[idx].reshape((nb, bs)
+                                                      + v.shape[1:]))
+            for k, v in test_data.items()}
+        self._mask = jnp.asarray(
+            (np.arange(nb * bs) < n).reshape(nb, bs), jnp.float32)
+        self._fn = make_eval_step(model)
+
+    def __call__(self, params) -> tuple[float, float]:
+        c, l, n = self._fn(params, self._batches, self._mask)
+        n = float(n)
+        return float(c) / n, float(l) / n

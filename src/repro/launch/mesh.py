@@ -21,6 +21,29 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def engine_mesh(cohorts: int = 0) -> Mesh:
+    """The execution engine's FL mesh over WHATEVER devices exist.
+
+    On a real pod (>= 256 devices) this is ``fl_view`` of the production
+    mesh; elsewhere it re-views the available devices as
+    ("client", "dsub", "model") with the widest client axis that divides
+    both the device count and ``cohorts`` (so the stacked-client-axis
+    constraints actually apply). On this CPU container that is a
+    (1, 1, 1) mesh — the identical program, degenerate shardings — which
+    is exactly what lets one engine serve paper scale and pod scale.
+    """
+    devices = np.asarray(jax.devices())
+    n = devices.size
+    if n >= 256:
+        return fl_view(make_production_mesh(), cohorts or 4)
+    client = 1
+    for d in range(1, n + 1):
+        if n % d == 0 and (cohorts <= 0 or cohorts % d == 0):
+            client = d
+    return Mesh(devices.reshape(client, n // client, 1),
+                ("client", "dsub", "model"))
+
+
 def fl_view(mesh: Mesh, cohorts: int, expert_parallel: int = 0,
             model_width: int = 0) -> Mesh:
     """("client", "dsub", "model") view of a production mesh.

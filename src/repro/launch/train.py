@@ -1,15 +1,23 @@
 """Federated training launcher.
 
-Two modes:
-  * paper scale (default): K simulated clients on the host device —
-    exactly the paper's §V experiment with all heterogeneity knobs.
-  * --pod: the pod-scale federated engine (C cohorts over the FL mesh
-    view). By default the WHOLE run is one fused ``lax.scan`` program —
-    one compile, zero per-round dispatch; ``--no-scan`` falls back to
-    the per-round-jit loop (the configuration the round-throughput
-    benchmark compares against). On this CPU container it runs the same
-    program on the single real device; on a v5e pod the identical code
-    spans 256 chips.
+Two configurations of ONE execution engine (``repro.exec``):
+  * paper scale (default): K simulated clients — exactly the paper's §V
+    experiment with all heterogeneity knobs. The run is driven in
+    ``--eval-every``-round chunks through the fused ``lax.scan`` engine
+    (batches for a whole chunk staged in one gather, next chunk
+    prefetched host-side while the device runs).
+  * --pod: C cohorts over the FL mesh view. The WHOLE run is one fused
+    ``lax.scan`` program — one compile, zero per-round dispatch.
+
+``--no-scan`` falls back to the bit-identical per-round-jit loop at
+either scale (the configuration the engine benchmarks compare against).
+Both scales run under ``launch.mesh.engine_mesh``: on this CPU container
+that is a degenerate (1, 1, 1) mesh; on a v5e pod the identical program
+spans 256 chips with the stacked client axis sharded.
+
+``--checkpoint`` saves and ``--resume`` restores the FULL round state
+{params, t, aux} (async ring buffer, fedopt moments), so continuation
+is bit-identical to an uninterrupted run.
 
 ``--algorithm`` accepts any name in the server-strategy registry
 (repro.core.strategies); ``--env`` any name in the environment registry
@@ -20,8 +28,10 @@ extends this launcher with no edits here.
 
 Examples:
   python -m repro.launch.train --arch paper-cnn --rounds 60 --p-limited 0.5
-  python -m repro.launch.train --algorithm fedopt --rounds 5
+  python -m repro.launch.train --algorithm fedopt --rounds 5 --eval-every 5
   python -m repro.launch.train --scenario bursty --rounds 40
+  python -m repro.launch.train --rounds 20 --checkpoint ck.npz
+  python -m repro.launch.train --rounds 20 --resume ck.npz
   python -m repro.launch.train --arch minitron-8b --pod --rounds 3 --reduced
 """
 from __future__ import annotations
@@ -34,17 +44,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import env as env_mod
-from repro.checkpoint.io import save
+from repro.checkpoint.io import restore_state, save_state
 from repro.configs.base import FLConfig, reduced
 from repro.configs.registry import (environment_names, get_arch,
                                     get_scenario, scenario_names)
 from repro.core import strategies
-from repro.core.round import (as_scan_scheds, init_state, make_round_step,
-                              make_train_loop)
+from repro.core.round import init_state
 from repro.core.simulation import FederatedSimulation
 from repro.data.partition import shard_partition
 from repro.data.pipeline import build_clients
 from repro.data.synth import make_image_classification, make_lm_tokens
+from repro.exec import ChunkRunner
+from repro.launch.mesh import engine_mesh
 from repro.models.api import build_model
 
 
@@ -54,13 +65,19 @@ def paper_scale(args, fl: FLConfig):
         n_train=args.n_train, n_test=400, seed=fl.seed)
     clients = build_clients(
         train, shard_partition(train["label"], fl.num_clients, seed=fl.seed))
-    sim = FederatedSimulation(model, fl, clients, test)
-    hist = sim.run(rounds=args.rounds, verbose=True)
+    sim = FederatedSimulation(model, fl, clients, test,
+                              use_scan=not args.no_scan,
+                              mesh=engine_mesh(fl.clients_per_round))
+    if args.resume:
+        sim.resume(args.resume)
+        print(f"resumed {args.resume} at round {sim.t}")
+    hist = sim.run(rounds=args.rounds, eval_every=args.eval_every,
+                   verbose=True)
     print(f"final: acc={hist.final_accuracy():.4f} "
           f"stability_var={hist.stability_variance():.3f}")
     if args.checkpoint:
-        save(args.checkpoint, sim.params)
-        print(f"saved {args.checkpoint}")
+        sim.save(args.checkpoint)
+        print(f"saved {args.checkpoint} (full round state, t={sim.t})")
     return hist
 
 
@@ -88,37 +105,46 @@ def pod_scale(args, fl: FLConfig):
     model = build_model(cfg)
     strategy = strategies.resolve(fl)
     state = init_state(model, fl, jax.random.PRNGKey(fl.seed), strategy)
+    if args.resume:
+        state = restore_state(args.resume, state)
+        print(f"resumed {args.resume} at round {int(state['t'])}")
     C = fl.cohorts
     environment = env_mod.resolve(
         fl.with_(num_clients=C, clients_per_round=C))
     batch = _pod_batch(cfg, fl, args)
-    scheds = as_scan_scheds(environment.batch(0, args.rounds))
+    runner = ChunkRunner(model, fl, strategy, per_round_batch=False,
+                         use_scan=not args.no_scan, mesh=engine_mesh(C))
 
+    t_start = int(state["t"])
+    t0 = time.time()
     if args.no_scan:
-        step = jax.jit(make_round_step(model, fl, strategy))
+        # stream per-round progress (a multi-hour pod run must not be
+        # silent): one-round chunks through the same runner
         for r in range(args.rounds):
-            sched = jax.tree.map(lambda x: x[r], scheds)
-            t0 = time.time()
-            state, metrics = step(state, batch, sched)
-            loss = float(metrics["loss"])
-            print(f"round {r}: loss={loss:.4f} on_time="
-                  f"{int(metrics['n_on_time'])}/{C} ({time.time()-t0:.2f}s)")
+            tr = time.time()
+            state, m = runner.run_chunk(
+                state, batch, environment.batch(t_start + r, 1),
+                scan_ok=False)
+            print(f"round {r}: loss={float(m['loss'][0]):.4f} on_time="
+                  f"{int(m['n_on_time'][0])}/{C} ({time.time()-tr:.2f}s)")
+        dt = time.time() - t0
     else:
-        loop = make_train_loop(model, fl, strategy)
-        t0 = time.time()
-        state, metrics = loop(state, batch, scheds)
-        jax.block_until_ready(metrics)
+        state, metrics = runner.run_chunk(
+            state, batch, environment.batch(t_start, args.rounds))
+        jax.block_until_ready(state["params"])
         dt = time.time() - t0
         losses = np.asarray(metrics["loss"])
         on_time = np.asarray(metrics["n_on_time"])
         for r in range(args.rounds):
             print(f"round {r}: loss={losses[r]:.4f} "
                   f"on_time={int(on_time[r])}/{C}")
-        print(f"{args.rounds} rounds in one fused scan: {dt:.2f}s total "
-              f"({dt/args.rounds*1e3:.1f} ms/round incl. compile)")
+    engine = "per-round jit loop" if args.no_scan else "one fused scan"
+    print(f"{args.rounds} rounds ({engine}): {dt:.2f}s total "
+          f"({dt/args.rounds*1e3:.1f} ms/round incl. compile)")
     if args.checkpoint:
-        save(args.checkpoint, state["params"])
-        print(f"saved {args.checkpoint}")
+        save_state(args.checkpoint, state)
+        print(f"saved {args.checkpoint} (full round state, "
+              f"t={int(state['t'])})")
     return state
 
 
@@ -141,7 +167,10 @@ def main():
                     help="trace env: .npz schedule to replay "
                          "('' = synthetic mobility trace)")
     ap.add_argument("--no-scan", action="store_true",
-                    help="pod: per-round jit loop instead of the fused scan")
+                    help="bit-identical per-round jit loop instead of the "
+                         "fused chunked scan (both scales)")
+    ap.add_argument("--eval-every", type=int, default=1,
+                    help="paper scale: eval cadence == scan chunk length")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route the server mix through the fused Pallas "
                          "kernel (interpret-mode off-TPU)")
@@ -155,7 +184,11 @@ def main():
     ap.add_argument("--batch", type=int, default=2, help="pod: per-step batch")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--n-train", type=int, default=1500)
-    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--checkpoint", default=None,
+                    help="save the full round state {params, t, aux} here")
+    ap.add_argument("--resume", default=None,
+                    help="restore a full round state and continue "
+                         "(bit-identical to an uninterrupted run)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -47,3 +47,16 @@ def constrain(x, *axes):
     if not any(fixed):
         return x
     return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+def constrain_leading(tree, axis: str):
+    """Constrain every leaf of a pytree on its LEADING dim only.
+
+    The engine uses this on the stacked client axis: batches
+    (C, steps, b, ...) and stacked client params (C, ...) shard over the
+    FL mesh's "client" axis while the trailing dims stay unconstrained
+    (FSDP/TP constraints belong to the model code). No-op leaf-wise when
+    no mesh is active or the axis doesn't divide (CPU tests)."""
+    return jax.tree.map(
+        lambda x: constrain(x, axis, *([None] * (x.ndim - 1)))
+        if getattr(x, "ndim", 0) else x, tree)
