@@ -35,7 +35,7 @@ def run(rounds=60, quick=False):
         for md in delays:
             grids.append((env, pd, md))
     if quick:
-        rounds = 25
+        rounds = min(rounds, 25)    # an explicit smaller budget wins
     for env, pd, md in grids:
         fl = FLConfig(num_clients=20, clients_per_round=5, local_epochs=2,
                       local_batch_size=25, lr=0.1, p_limited=0.25,

@@ -1,0 +1,233 @@
+"""Server-plane fusion benchmark: ONE fused pass per round vs the
+unfused per-leaf jnp chain, swept over (K, N) up to LLM-scale parameter
+counts via flat-param synthesis.
+
+Measures exactly what the round engine dispatches
+(``ServerStrategy.fused_server_update`` with ``fl.server_plane`` =
+"fused" vs "legacy") for the three server planes:
+
+  * ``mix``   — sync AMA (the paper's Eq. 5 hot loop),
+  * ``async`` — async AMA with the staleness ring buffer (Eqs. 6-11),
+  * ``adam``  — FedOpt server-Adam on the aggregated pseudo-gradient.
+
+Two synthesis shapes per (K, N):
+
+  * ``flat``  — params as one (N,) vector: the pure bandwidth story and
+    the layout a production pod stages params in (one kernel tile grid,
+    no flatten cost);
+  * ``tree``  — params as a transformer-like multi-leaf pytree summing
+    to N: what the engine actually sees at paper/pod scale today. The
+    unfused chain pays per-leaf dispatch; the fused path pays the
+    flatten/unflatten staging and wins anyway.
+
+Modes are ALTERNATED pass-by-pass (best-of-``reps``) so host contention
+hits both engines alike. Emits ``BENCH_server_plane.json`` at the repo
+root with a ``smoke`` section measured at the exact sizes the CI
+regression gate re-runs (``scripts/check_bench.py``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import strategies
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                   "BENCH_server_plane.json")
+
+MODES = {"mix": ("ama", 0), "async": ("async_ama", 5), "adam": ("fedopt", 0)}
+
+# a transformer-ish leaf split (fractions of N): embedding, per-block
+# attention/mlp weights, norms, head — the unfused chain runs per leaf
+TREE_FRACS = ([0.18] + [0.035, 0.105, 0.0005, 0.0005] * 4 + [0.02, 0.2])
+
+
+def _synth_params(rng, N: int, K: int, shape: str):
+    """(prev, stacked) as {"flat": ...} or a multi-leaf tree of total N."""
+    if shape == "flat":
+        sizes = {"p": N}
+    else:
+        sizes, rem = {}, N
+        for i, f in enumerate(TREE_FRACS[:-1]):
+            n = max(1, int(N * f))
+            sizes[f"l{i:02d}"] = n
+            rem -= n
+        sizes["head"] = max(1, rem)
+    prev = {k: jnp.asarray(rng.randn(n), jnp.float32)
+            for k, n in sizes.items()}
+    stacked = {k: jnp.asarray(rng.randn(K, n).astype(np.float32))
+               for k, n in sizes.items()}
+    return prev, stacked
+
+
+def _sched(rng, K: int, md: int):
+    delayed = rng.rand(K) < (0.4 if md else 0.0)
+    delays = np.where(delayed, rng.randint(1, max(md, 1) + 1, K), 1)
+    return {"limited": jnp.asarray(rng.rand(K) < 0.3),
+            "delayed": jnp.asarray(delayed),
+            "delays": jnp.asarray(delays.astype(np.int32)),
+            "data_sizes": jnp.asarray(rng.rand(K) + 0.5, jnp.float32)}
+
+
+def _measure(mode: str, K: int, N: int, shape: str, reps: int) -> dict:
+    algo, md = MODES[mode]
+    rng = np.random.RandomState(0)
+    prev, stacked = _synth_params(rng, N, K, shape)
+    sched = _sched(rng, K, md)
+    fns, auxes = {}, {}
+    for impl in ("fused", "legacy"):
+        fl = FLConfig(algorithm=algo, max_delay=md,
+                      p_delay=0.4 if md else 0.0, server_plane=impl)
+        s = strategies.resolve(fl)
+        auxes[impl] = s.init_state(prev)
+        fns[impl] = jax.jit(
+            lambda t, p, c, a, _s=s: _s.fused_server_update(t, p, c,
+                                                            sched, a))
+    best = {impl: float("inf") for impl in fns}
+    for impl, fn in fns.items():                     # compile + warm
+        jax.block_until_ready(fn(3, prev, stacked, auxes[impl]))
+    for _ in range(reps):                            # alternate passes
+        for impl, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(3, prev, stacked, auxes[impl]))
+            best[impl] = min(best[impl], time.perf_counter() - t0)
+    return {"mode": mode, "shape": shape, "K": K, "N": N,
+            "fused_ms": round(best["fused"] * 1e3, 2),
+            "unfused_ms": round(best["legacy"] * 1e3, 2),
+            "speedup": round(best["legacy"] / best["fused"], 3)}
+
+
+def _interpret_parity() -> float:
+    """Max |err| of the interpret-mode Pallas kernel bodies vs the flat
+    oracle AT THE SAME flat layout (the bit-exactness contract; see
+    kernels/server_plane.py) — proves the kernel bodies themselves run.
+    The CPU perf path above is the jitted oracle; the interpreter is
+    emulation."""
+    from repro.kernels import ref as kref
+    from repro.kernels import server_plane as sp
+    rng = np.random.RandomState(1)
+    K, N, Q = 4, 4096 + 17, 6
+    prev = jnp.asarray(rng.randn(N), jnp.float32)
+    stacked = jnp.asarray(rng.randn(K, N).astype(np.float32))
+    sizes = jnp.asarray(rng.rand(K) + 0.5, jnp.float32)
+    keep = jnp.asarray((rng.rand(K) < 0.7).astype(np.float32))
+    delayed = 1.0 - keep                 # async: on-time == kept
+    coefs = jnp.asarray([0.1, 2.5e-3, 0.95, 7.0], jnp.float32)
+    qsum = jnp.asarray(rng.randn(Q, N).astype(np.float32))
+    qgamma = jnp.asarray(rng.rand(Q), jnp.float32)
+    delays = jnp.asarray(rng.randint(1, Q, K), jnp.int32)
+    tq = jnp.asarray([7, 7 % Q], jnp.int32)
+    hyp = jnp.asarray([0.1, 2.5e-3, 0.95, 0.6], jnp.float32)
+    m = jnp.asarray(rng.randn(N).astype(np.float32))
+    v = jnp.abs(jnp.asarray(rng.randn(N).astype(np.float32)))
+    scalars = jnp.asarray([0.9, 0.99, 0.1, 1e-3, 3.0], jnp.float32)
+    pairs = [
+        (sp.server_mix_flat(prev, stacked, sizes, keep, coefs,
+                            block=1024, interpret=True),
+         jax.jit(kref.server_mix_math)(prev, stacked, sizes, keep, coefs)),
+        (sp.server_async_flat(prev, stacked, qsum, qgamma, sizes,
+                              delayed, delays, tq, hyp, block=1024,
+                              interpret=True),
+         jax.jit(kref.server_async_math)(prev, stacked, qsum, qgamma,
+                                         sizes, delayed, delays, tq,
+                                         hyp)),
+        (sp.server_adam_flat(prev, stacked, m, v, sizes, keep, scalars,
+                             block=1024, interpret=True),
+         jax.jit(kref.server_adam_math)(prev, stacked, m, v, sizes, keep,
+                                        scalars)),
+    ]
+    err = 0.0
+    for got, want in pairs:
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            err = max(err, float(jnp.max(jnp.abs(a - b))))
+    return err
+
+
+def _geomean(xs) -> float:
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-9)))))
+
+
+def _sweep(cases, reps: int) -> list[dict]:
+    rows = []
+    for mode, K, N, shape in cases:
+        row = _measure(mode, K, N, shape, reps)
+        rows.append(row)
+        print(f"server_plane.{mode}.{shape}.K{K}.N{N},"
+              f"{row['speedup']},x fused over unfused "
+              f"({row['unfused_ms']}ms -> {row['fused_ms']}ms)")
+    return rows
+
+
+# smoke rows lean on the mix plane at >=1M params: small-N rows are
+# dispatch-dominated and too noisy to gate CI on (the async/adam planes
+# are CPU-parity by design — regressions there show up in the committed
+# full sweep, not the smoke gate)
+SMOKE_CASES = [("mix", 8, 1 << 20, "flat"), ("mix", 8, 1 << 20, "tree"),
+               ("async", 8, 1 << 20, "flat")]
+FULL_CASES = (
+    [(m, 4, 1 << 20, "flat") for m in MODES]
+    + [(m, 10, 1 << 22, "flat") for m in MODES]
+    + [(m, 10, 1 << 22, "tree") for m in MODES]
+    + [(m, 10, 1 << 24, "flat") for m in MODES]
+    # largest (K, N): 16 clients x 33.5M params (~2.1 GB of stacked
+    # deltas/round) on the paper's primary server plane, the AMA mix —
+    # the async ring/server-Adam planes are CPU-parity (their extra
+    # (Q, N)/moment streams bound both impls alike; the fusion win
+    # there is the TPU VMEM staging) and are reported at 2^24 above
+    + [("mix", 16, 1 << 25, "flat")]
+)
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    reps = 3 if smoke else (3 if quick else 5)
+    if smoke:
+        rows = _sweep(SMOKE_CASES, reps)
+        g = _geomean([r["speedup"] for r in rows])
+        # "gate" is the variance-discounted floor the CI regression gate
+        # compares against (scripts/check_bench.py): shared-runner noise
+        # on these wall-clock ratios is ~±20%, so the gate catches real
+        # fusion regressions (2-10x drops) without flaking on jitter
+        rec = {"rows": rows, "geomean_speedup": round(g, 3),
+               "gate": round(g * 0.8, 3)}
+        print(f"server_plane.smoke_geomean,{rec['geomean_speedup']},")
+        return rec
+
+    rows = _sweep(FULL_CASES, reps)
+    largest_n = max(r["N"] for r in rows)
+    largest = [r for r in rows if r["N"] == largest_n]
+    err = _interpret_parity()
+    smoke_rows = _sweep(SMOKE_CASES, 3)
+    sg = _geomean([r["speedup"] for r in smoke_rows])
+    rec = {
+        "bench": "server_plane",
+        "backend": jax.default_backend(),
+        "rows": rows,
+        "largest": {"K": largest[0]["K"], "N": largest_n,
+                    "speedups": {r["mode"]: r["speedup"] for r in largest},
+                    "min_speedup": min(r["speedup"] for r in largest)},
+        "interpret_parity_maxerr": err,
+        "smoke": {"rows": smoke_rows, "geomean_speedup": round(sg, 3),
+                  "gate": round(sg * 0.8, 3)},
+    }
+    print(f"server_plane.largest_min_speedup,"
+          f"{rec['largest']['min_speedup']},x at K={largest[0]['K']} "
+          f"N={largest_n}")
+    print(f"server_plane.interpret_parity_maxerr,{err},<=1e-6 expected "
+          f"(1-2 ulp: shape-dependent FMA contraction)")
+    assert err <= 1e-6, f"interpret kernels diverge from the oracle: {err}"
+    with open(OUT, "w") as f:
+        json.dump(rec, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(OUT)}")
+    return rec
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--full" not in sys.argv, smoke="--smoke" in sys.argv)

@@ -68,37 +68,61 @@ def _measure(model, fl, clients, test, *, rounds: int, eval_every: int,
     return out["chunked_scan"], out["per_round_loop"]
 
 
-def run(quick: bool = True, smoke: bool = False) -> dict:
-    rounds = 4 if smoke else (8 if quick else 24)
-    eval_every = 2 if smoke else 4
-    reps = 1 if smoke else 3
-    n_train, n_clients = (400, 10) if smoke else (1500, 20)
+SMOKE = dict(rounds=4, eval_every=2, reps=2, n_train=400, n_clients=10)
+
+
+def _bench(*, rounds, eval_every, reps, n_train, n_clients):
     model, clients, test = _world(n_train, n_clients)
     fl = FLConfig(num_clients=n_clients,
                   clients_per_round=max(2, n_clients // 4),
                   local_epochs=2, local_batch_size=25, lr=0.1,
                   algorithm="ama_fes", seed=0)
-
     scan, loop = _measure(model, fl, clients, test, rounds=rounds,
                           eval_every=eval_every, reps=reps)
+    speedup = round(scan["rounds_per_sec"]
+                    / max(loop["rounds_per_sec"], 1e-9), 3)
+    return fl, scan, loop, speedup
 
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    if smoke:
+        fl, scan, loop, speedup = _bench(**SMOKE)
+        rec = {"chunked_scan": scan, "per_round_loop": loop,
+               "speedup": speedup, "gate": round(speedup * 0.8, 3)}
+        print(f"sim_engine.loop_rounds_per_sec,"
+              f"{loop['rounds_per_sec']},")
+        print(f"sim_engine.scan_rounds_per_sec,"
+              f"{scan['rounds_per_sec']},")
+        print(f"sim_engine.speedup,{speedup},x chunked scan over "
+              f"per-round loop (smoke)")
+        return rec
+
+    rounds, eval_every = (8 if quick else 24), 4
+    fl, scan, loop, speedup = _bench(rounds=rounds, eval_every=eval_every,
+                                     reps=3, n_train=1500, n_clients=20)
     rec = {"bench": "sim_engine", "scale": "paper",
            "arch": "paper-cnn", "algorithm": fl.algorithm,
-           "n_train": n_train, "n_clients": n_clients,
+           "n_train": 1500, "n_clients": 20,
            "clients_per_round": fl.clients_per_round,
            "eval_every": eval_every,
            "chunked_scan": scan, "per_round_loop": loop,
-           "speedup": round(scan["rounds_per_sec"]
-                            / max(loop["rounds_per_sec"], 1e-9), 3)}
+           "speedup": speedup}
     print(f"sim_engine.loop_rounds_per_sec,{loop['rounds_per_sec']},")
     print(f"sim_engine.scan_rounds_per_sec,{scan['rounds_per_sec']},")
     print(f"sim_engine.speedup,{rec['speedup']},x chunked scan over "
           f"per-round loop ({rounds} rounds, eval_every={eval_every})")
-    if not smoke:
-        with open(OUT, "w") as f:
-            json.dump(rec, f, indent=2)
-            f.write("\n")
-        print(f"wrote {os.path.normpath(OUT)}")
+    # CI regression-gate baseline: the exact configuration the smoke
+    # gate re-runs (scripts/check_bench.py), variance-discounted so the
+    # gate trips on engine regressions, not shared-runner jitter
+    _, s_scan, s_loop, s_speedup = _bench(**SMOKE)
+    rec["smoke"] = {"speedup": s_speedup,
+                    "gate": round(s_speedup * 0.8, 3)}
+    print(f"sim_engine.smoke_speedup,{s_speedup},gate baseline "
+          f"{rec['smoke']['gate']}")
+    with open(OUT, "w") as f:
+        json.dump(rec, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(OUT)}")
     return rec
 
 

@@ -1,0 +1,77 @@
+"""CI benchmark-regression gate.
+
+Re-runs the smoke configuration of each gated benchmark and fails (exit
+1) if its fused/scan throughput ratio drops below 0.9x the committed
+``BENCH_*.json`` baseline, so a PR that quietly un-fuses the scan engine
+or the server plane cannot land green. The committed baseline is the
+JSON's ``smoke.gate`` value — the smoke-scale speedup discounted for
+shared-runner variance (~±20% on wall-clock ratios at these sizes), so
+the gate trips on real regressions (2-10x fusion losses), not jitter.
+
+Fresh smoke results are written as JSON next to the baselines (or into
+``--out-dir``) for upload as workflow artifacts.
+
+Usage:  PYTHONPATH=src python scripts/check_bench.py [--out-dir DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "benchmarks"))
+
+FACTOR = 0.9
+
+#: benchmark module -> (baseline json, fresh-run metric, baseline gate key)
+GATES = {
+    "sim_engine": ("BENCH_sim_engine.json",
+                   lambda rec: rec["speedup"],
+                   lambda base: base["smoke"]["gate"]),
+    "server_plane": ("BENCH_server_plane.json",
+                     lambda rec: rec["geomean_speedup"],
+                     lambda base: base["smoke"]["gate"]),
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(ROOT, "bench-fresh"),
+                    help="where fresh smoke JSONs go (workflow artifacts)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    failures = []
+    for name, (baseline_file, fresh_metric, base_gate) in GATES.items():
+        path = os.path.join(ROOT, baseline_file)
+        with open(path) as f:
+            baseline = json.load(f)
+        print(f"--- {name}: smoke run (baseline {baseline_file}) ---")
+        mod = __import__(name)
+        rec = mod.run(smoke=True)
+        out = os.path.join(args.out_dir, f"BENCH_{name}_smoke.json")
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=2)
+            f.write("\n")
+        fresh = fresh_metric(rec)
+        floor = FACTOR * base_gate(baseline)
+        verdict = "OK" if fresh >= floor else "REGRESSION"
+        print(f"{name}: fresh speedup {fresh:.3f} vs floor {floor:.3f} "
+              f"(0.9 x committed gate) -> {verdict}")
+        if fresh < floor:
+            failures.append(name)
+
+    if failures:
+        print(f"benchmark regression gate FAILED: {failures} — fused/scan "
+              f"throughput dropped below 0.9x the committed baseline "
+              f"(re-baseline BENCH_*.json only with a justified perf "
+              f"change)")
+        return 1
+    print("benchmark regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

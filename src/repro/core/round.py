@@ -3,10 +3,10 @@
 ``make_round_step`` is the paper's Algorithm 1 as a single ``train_step``
 suitable for pjit on the production mesh: C client cohorts train in
 parallel on the "client" mesh axis with NO cross-client collectives
-during local steps; the server aggregation (one weighted reduction over
-the client axis + the strategy's mix) is the only cross-cohort
-communication of the round — the paper's rare-global-aggregation
-pattern, TPU-native.
+during local steps; the server aggregation — one fused server-plane
+kernel pass over the client axis (``strategy.fused_server_update``) —
+is the only cross-cohort communication of the round — the paper's
+rare-global-aggregation pattern, TPU-native.
 
 ``make_train_loop`` goes one step further: it rolls N rounds into one
 ``jax.lax.scan`` over precomputed schedule arrays, so an entire run
@@ -75,8 +75,11 @@ def make_round_step(model, fl: FLConfig, strategy=None):
         client_params, losses = local_train(prev_global, batch,
                                             sched["limited"])
         client_params = constrain_leading(client_params, "client")
-        new_params, aux = strategy.aggregate(t, prev_global, client_params,
-                                             sched, state["aux"])
+        # ONE fused server-plane pass: staleness weights, delta
+        # accumulation, ring-buffer mix and (fedopt) server-Adam in a
+        # single kernel dispatch (fl.server_plane selects the impl)
+        new_params, aux = strategy.fused_server_update(
+            t, prev_global, client_params, sched, state["aux"])
         on_time = jnp.logical_not(sched["delayed"])
         metrics = {"loss": jnp.mean(losses),
                    "n_on_time": jnp.sum(on_time.astype(jnp.int32))}
@@ -119,7 +122,10 @@ def make_train_loop(model, fl: FLConfig, strategy=None, *,
 
 def make_train_step_for_lowering(model, fl: FLConfig):
     """Flat-signature variant for .lower(): (params, [aux,] t, batch,
-    sched) -> same. Keeps the dry-run input_specs simple."""
+    sched) -> same. Keeps the dry-run input_specs simple. Off-TPU the
+    fused server plane lowers as the flat oracle (see
+    ``kernels.server_plane._route``), so the dry-run's HLO cost analysis
+    sees the real fused op sequence, not interpreter emulation."""
     strategy = strategies.resolve(fl)
     round_step = make_round_step(model, fl, strategy)
 

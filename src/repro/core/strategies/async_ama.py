@@ -32,3 +32,18 @@ class AsyncAMAStrategy(AMAStrategy):
             self.fl, t, prev_global, client_params, sched["data_sizes"],
             on_time, queue, use_kernel=self.fl.use_kernel)
         return new_global, {"queue": queue}
+
+    def fused_server_update(self, t, prev_global, client_params, sched,
+                            aux_state):
+        if self.server_impl == "legacy":
+            return self.aggregate(t, prev_global, client_params, sched,
+                                  aux_state)
+        from repro.kernels.server_plane import server_async_tree
+        fl = self.fl
+        hyp = jnp.asarray([fl.alpha0, fl.eta, fl.alpha_cap,
+                           fl.staleness_b], jnp.float32)
+        new_global, queue = server_async_tree(
+            prev_global, client_params, aux_state["queue"],
+            sched["data_sizes"], sched["delayed"].astype(jnp.float32),
+            sched["delays"], t, hyp, impl=self.server_impl)
+        return new_global, {"queue": queue}

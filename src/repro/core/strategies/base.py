@@ -13,7 +13,16 @@ differ:
   * ``aggregate(t, prev_global, client_params, sched, aux_state)`` —
     the server update itself, a pure jittable function of the round
     index, the previous global model, the stacked client results and the
-    round's schedule arrays.
+    round's schedule arrays;
+  * ``fused_server_update(...)`` — the same update through the fused
+    server-plane kernel suite (``repro.kernels.server_plane``): ONE
+    Pallas pass per round (weights, delta accumulation, ring-buffer
+    mix, server-Adam all in-kernel) instead of a chain of jnp ops. The
+    round engine (``core.round.make_round_step``) dispatches here;
+    ``fl.server_plane`` selects "fused" (pallas_call on TPU, the jitted
+    flat oracle off-TPU), "ref" (always the oracle), "interpret" (the
+    Pallas body through the interpreter — validation only) or "legacy"
+    (the original per-leaf ``aggregate`` chain).
 
 Every method is traced inside the jitted round (and inside the fused
 ``lax.scan`` over rounds), so implementations must be functional: no
@@ -55,6 +64,22 @@ class ServerStrategy:
         ``sched`` is {"limited","delayed","delays","data_sizes"}, each (C,).
         Returns (new_global, new_aux_state)."""
         raise NotImplementedError
+
+    def fused_server_update(self, t, prev_global, client_params, sched,
+                            aux_state):
+        """One server update through the fused server-plane kernel suite
+        (one HBM pass per round; see ``repro.kernels.server_plane``).
+        Same signature and contract as ``aggregate``. The base fallback
+        routes to ``aggregate`` so out-of-tree strategies keep working;
+        built-ins override it and honour ``fl.server_plane``
+        ("fused" | "ref" | "legacy")."""
+        return self.aggregate(t, prev_global, client_params, sched,
+                              aux_state)
+
+    @property
+    def server_impl(self) -> str:
+        """The configured server-plane implementation."""
+        return getattr(self.fl, "server_plane", "fused")
 
     # ---------------------------------------------------- client side ----
     def local_grad_transform(self, grads, params, global_params, fes_mask,

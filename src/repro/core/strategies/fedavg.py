@@ -21,3 +21,19 @@ class FedAvgStrategy(ServerStrategy):
                                       sched["data_sizes"], keep,
                                       use_kernel=self.fl.use_kernel)
         return new_global, aux_state
+
+    def fused_server_update(self, t, prev_global, client_params, sched,
+                            aux_state):
+        if self.server_impl == "legacy":
+            return self.aggregate(t, prev_global, client_params, sched,
+                                  aux_state)
+        from repro.kernels.server_plane import mix_coefs, server_mix_tree
+        keep = jnp.logical_and(
+            jnp.logical_not(sched["delayed"]),
+            jnp.logical_not(sched["limited"])).astype(jnp.float32)
+        # adaptive=False zeroes the alpha schedule: the plain weighted
+        # average is the alpha=0 corner of the same fused pass
+        new_global = server_mix_tree(
+            prev_global, client_params, sched["data_sizes"], keep,
+            mix_coefs(self.fl, t, adaptive=False), impl=self.server_impl)
+        return new_global, aux_state

@@ -69,3 +69,22 @@ class FedOptStrategy(AMAStrategy):
                               + fl.server_lr * u).astype(p.dtype),
                 prev_global, update)
         return new_global, {"m": m, "v": v, "step": step}
+
+    def fused_server_update(self, t, prev_global, client_params, sched,
+                            aux_state):
+        if self.server_impl == "legacy":
+            return self.aggregate(t, prev_global, client_params, sched,
+                                  aux_state)
+        from repro.kernels.server_plane import server_adam_tree
+        fl = self.fl
+        keep = jnp.logical_not(sched["delayed"]).astype(jnp.float32)
+        step = aux_state["step"] + 1
+        scalars = jnp.stack([jnp.float32(fl.server_b1),
+                             jnp.float32(fl.server_b2),
+                             jnp.float32(fl.server_lr),
+                             jnp.float32(fl.server_tau),
+                             step.astype(jnp.float32)])
+        new_global, m, v = server_adam_tree(
+            prev_global, client_params, aux_state["m"], aux_state["v"],
+            sched["data_sizes"], keep, scalars, impl=self.server_impl)
+        return new_global, {"m": m, "v": v, "step": step}

@@ -35,3 +35,15 @@ class FedProxStrategy(ServerStrategy):
                                       sched["data_sizes"], on_time,
                                       use_kernel=self.fl.use_kernel)
         return new_global, aux_state
+
+    def fused_server_update(self, t, prev_global, client_params, sched,
+                            aux_state):
+        if self.server_impl == "legacy":
+            return self.aggregate(t, prev_global, client_params, sched,
+                                  aux_state)
+        from repro.kernels.server_plane import mix_coefs, server_mix_tree
+        keep = jnp.logical_not(sched["delayed"]).astype(jnp.float32)
+        new_global = server_mix_tree(
+            prev_global, client_params, sched["data_sizes"], keep,
+            mix_coefs(self.fl, t, adaptive=False), impl=self.server_impl)
+        return new_global, aux_state

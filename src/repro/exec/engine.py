@@ -24,7 +24,13 @@ path with a different data plane:
 
 Everything round-path-schedulable comes in through the two registries:
 the server rule is a ``ServerStrategy``, the world an ``Environment``;
-the engine owns only data movement, chunking and evaluation.
+the engine owns only data movement, chunking and evaluation. The server
+side of every round — staleness weights, weighted delta accumulation,
+ring-buffer mix, server-Adam — dispatches as ONE fused server-plane
+kernel call (``ServerStrategy.fused_server_update`` →
+``repro.kernels.server_plane``) on both the chunked-scan path and the
+``--no-scan`` per-round path; ``fl.server_plane`` selects the impl
+("fused" | "ref" | "legacy").
 """
 from __future__ import annotations
 
@@ -39,8 +45,7 @@ from repro import env as env_mod
 from repro.checkpoint.io import restore_state, save_state
 from repro.configs.base import FLConfig
 from repro.core import strategies
-from repro.core.round import (as_scan_scheds, init_state, make_round_step,
-                              make_train_loop)
+from repro.core.round import as_scan_scheds, init_state, make_train_loop
 from repro.data.pipeline import ChunkPrefetcher, stage_chunk
 from repro.exec.evals import Evaluator
 
@@ -67,8 +72,8 @@ class ChunkRunner:
     ``per_round_batch=True`` (paper scale) scans a fresh
     (n, C, steps, b, ...) batch row per round; ``False`` (pod scale)
     re-feeds one (C, steps, b, ...) batch every round. ``use_scan=False``
-    replays the identical rounds through a per-round-jit loop — the
-    numerically-equivalent ``--no-scan`` configuration. A mesh makes the
+    replays the identical rounds one at a time (scan of length 1) — the
+    bit-identical ``--no-scan`` configuration. A mesh makes the
     engine span a pod: the call runs under it, activating the
     stacked-client-axis constraints inside ``make_round_step``.
     """
@@ -81,13 +86,23 @@ class ChunkRunner:
         self.per_round_batch = per_round_batch
         self.use_scan = use_scan
         self.mesh = mesh
-        self._loop = None        # fused scan program (built on first use)
-        self._step = None        # per-round fallback program
+        # ONE jitted train_loop serves the fused chunk scan AND the
+        # per-round fallback (scan of length 1): jax.jit specialises per
+        # chunk-length shape under the same callable, and sharing the
+        # callable keeps the two paths structurally identical
+        self._loop = None
         self._donate = donate
 
     def _ctx(self):
         return self.mesh if self.mesh is not None else (
             contextlib.nullcontext())
+
+    def _train_loop(self):
+        if self._loop is None:
+            self._loop = make_train_loop(
+                self.model, self.fl, self.strategy,
+                per_round_batch=self.per_round_batch, donate=self._donate)
+        return self._loop
 
     def run_chunk(self, state, batch, sched_batch: dict, *,
                   scan_ok: bool = True):
@@ -98,31 +113,31 @@ class ChunkRunner:
         come back as numpy arrays with a leading (n,) axis.
         ``scan_ok=False`` routes an off-cadence chunk (a tail shorter
         than ``eval_every``, a standalone single round) through the
-        bit-identical per-round step instead of compiling a fresh
-        scan program for its one-off length.
+        bit-identical per-round path instead of compiling a fresh
+        scan program for its one-off length. That path is a SCAN OF
+        LENGTH 1 per round, not a bare jitted round step: XLA compiles
+        a ``lax.scan`` body as its own computation, so the per-round
+        program and the chunked scan contract multiply-add chains
+        identically — a bare per-round jit re-fuses the fused
+        server-plane chains with the surrounding round and drifts by
+        1-2 ulp, which the bit-identity nets (and resume across chunk
+        boundaries) do not tolerate.
         """
         scheds = as_scan_scheds(sched_batch)
         n = int(jax.tree.leaves(scheds)[0].shape[0])
         batch = jax.tree.map(jnp.asarray, batch)
         with self._ctx():
+            loop = self._train_loop()
             if self.use_scan and scan_ok:
-                if self._loop is None:
-                    self._loop = make_train_loop(
-                        self.model, self.fl, self.strategy,
-                        per_round_batch=self.per_round_batch,
-                        donate=self._donate)
-                state, metrics = self._loop(state, batch, scheds)
+                state, metrics = loop(state, batch, scheds)
             else:
-                if self._step is None:
-                    self._step = jax.jit(make_round_step(
-                        self.model, self.fl, self.strategy))
                 rows = []
                 for r in range(n):
-                    b = (jax.tree.map(lambda x: x[r], batch)
+                    b = (jax.tree.map(lambda x: x[r:r + 1], batch)
                          if self.per_round_batch else batch)
-                    sc = jax.tree.map(lambda x: x[r], scheds)
-                    state, m = self._step(state, b, sc)
-                    rows.append(m)
+                    sc = jax.tree.map(lambda x: x[r:r + 1], scheds)
+                    state, m = loop(state, b, sc)
+                    rows.append(jax.tree.map(lambda x: x[0], m))
                 metrics = {k: jnp.stack([m[k] for m in rows])
                            for k in rows[0]}
         return state, jax.tree.map(np.asarray, metrics)

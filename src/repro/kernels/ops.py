@@ -12,9 +12,14 @@ from repro.kernels import ref
 from repro.kernels.ama_mix import ama_mix_flat
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.kernels.server_plane import (server_adam_flat, server_adam_tree,
+                                        server_async_flat, server_async_tree,
+                                        server_mix_flat, server_mix_tree)
 
 __all__ = ["ama_mix_flat", "flash_attention", "rwkv6_scan",
-           "ama_mix_tree", "ama_mix_pairwise"]
+           "ama_mix_tree", "ama_mix_pairwise",
+           "server_mix_flat", "server_async_flat", "server_adam_flat",
+           "server_mix_tree", "server_async_tree", "server_adam_tree"]
 
 
 def _on_tpu() -> bool:

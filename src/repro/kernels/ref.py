@@ -1,4 +1,16 @@
-"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+The ``server_*_math`` functions double as the SHARED BODY of the fused
+server-plane kernels (``kernels/server_plane.py``): the kernel loads its
+block from the refs and calls the same function the oracle calls on the
+full arrays. Elementwise math and the sequential client-axis
+accumulation are therefore the identical op sequence in both; the
+interpret-mode kernels match these oracles to within 1-2 ulp (XLA's
+multiply-add contraction is shape-dependent, so strict bit-equality
+across different blockings is not guaranteed — the engine's scan==loop
+bit-identity instead comes from both paths running the SAME program).
+Compiled TPU mode is allclose (XLA may re-associate).
+"""
 from __future__ import annotations
 
 import jax
@@ -14,6 +26,121 @@ def ama_mix_ref(prev, stacked, alpha, weights):
     acc = acc + jnp.einsum(
         "k...,k->...", stacked.astype(jnp.float32), weights.astype(jnp.float32))
     return acc.astype(prev.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused server plane (one HBM pass per round): shared kernel/oracle math
+# ---------------------------------------------------------------------------
+
+def _norm_weights(sizes, keep):
+    """w_i = |d_i|*keep_i / sum_j |d_j|*keep_j (the FedAvg convention);
+    ``keep`` is a {0,1} f32 mask. Returns (w, tot)."""
+    w = sizes.astype(jnp.float32) * keep.astype(jnp.float32)
+    tot = jnp.sum(w)
+    return w / jnp.maximum(tot, 1e-9), tot
+
+
+def server_mix_math(prev, stacked, sizes, keep, coefs):
+    """The sync server plane: staleness/participation weights + weighted
+    client accumulation + AMA mix, one pass over the parameter axis.
+
+    prev: (n,); stacked: (K, n); sizes/keep: (K,) f32;
+    coefs: (4,) f32 = [alpha0, eta, alpha_cap, t]. alpha_t = min(alpha0 +
+    eta*t, cap) computed here, so fedavg/fedprox pass zeros for an
+    alpha=0 plain weighted average. When nobody is kept (tot == 0) the
+    whole beta budget reverts to the previous model.
+    """
+    alpha = jnp.minimum(coefs[0] + coefs[1] * coefs[3], coefs[2])
+    beta = 1.0 - alpha
+    w, tot = _norm_weights(sizes, keep)
+    a_eff = jnp.where(tot > 0, alpha, alpha + beta)
+    # sequential multiply-add chain over the static client axis: XLA
+    # fuses it into ONE pass reading each element once (measurably
+    # faster than an einsum contraction on CPU), and the per-element op
+    # order is independent of the n-blocking, so the kernel tiles and
+    # the whole-array oracle stay bit-identical
+    acc = prev.astype(jnp.float32) * a_eff
+    for k in range(stacked.shape[0]):
+        acc = acc + stacked[k].astype(jnp.float32) * (beta * w[k])
+    return acc.astype(prev.dtype)
+
+
+def server_async_math(prev, stacked, qsum, qgamma, sizes, delayed, delays,
+                      tq, hyp):
+    """The async server plane (paper Eqs. 6-11) in one pass: staleness
+    weights gamma^- from ``delays``, ring-buffer enqueue of this round's
+    delayed updates, pop of the slot arriving now, and the
+    alpha/beta/gamma mix.
+
+    prev: (n,); stacked: (K, n); qsum: (Q, n) f32; qgamma: (Q,) f32;
+    sizes/delayed: (K,) f32; delays: (K,) int32; tq: (2,) int32 =
+    [t, t % Q] (the slot precomputed so the modulo is shared with the
+    enqueue arrivals); hyp: (4,) f32 = [alpha0, eta, alpha_cap,
+    staleness_b]. Returns (out, new_qsum, new_qgamma).
+    """
+    K, Q = stacked.shape[0], qgamma.shape[0]
+    t, pop = tq[0], tq[1]
+    alpha_un = 1.0 - jax.nn.sigmoid(1.0)                    # Eq. 9
+    g = (hyp[3] * jax.nn.sigmoid(-delays.astype(jnp.float32))
+         * delayed.astype(jnp.float32))                     # (K,) gamma^-
+    arrival = (t + delays) % Q                              # (K,)
+    onehot = (arrival[:, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (K, Q), 1)
+              ).astype(jnp.float32) * g[:, None]            # (K, Q)
+    qg = qgamma + jnp.sum(onehot, axis=0)
+    sel = (jax.lax.broadcasted_iota(jnp.int32, (1, Q), 1)[0] == pop
+           ).astype(jnp.float32)                            # (Q,) pop mask
+    stale_gamma = jnp.sum(qg * sel)
+    new_qgamma = qg * (1.0 - sel)
+
+    A = jnp.minimum(hyp[0] + hyp[1] * t.astype(jnp.float32), hyp[2])
+    beta = 1.0 - A
+    denom = alpha_un + stale_gamma
+    alpha = alpha_un / denom * A                            # Eq. 10
+    gscale = A / denom                                      # Eq. 11
+    w, tot = _norm_weights(sizes, 1.0 - delayed.astype(jnp.float32))
+    a_eff = jnp.where(tot > 0, alpha, alpha + beta)
+
+    # one sequential pass over the client axis feeds BOTH the on-time
+    # aggregate and the ring-buffer enqueue (each client row is read
+    # once); the multiply-add chains fuse into a single XLA pass and the
+    # per-element op order is blocking-independent (kernel == oracle)
+    acc = prev.astype(jnp.float32) * a_eff
+    rows = [qsum[q] for q in range(Q)]
+    for k in range(K):
+        x = stacked[k].astype(jnp.float32)
+        acc = acc + x * (beta * w[k])
+        for q in range(Q):                  # enqueue into arrival slots
+            rows[q] = rows[q] + x * onehot[k, q]
+    stale = rows[0] * sel[0]                # pop slot t % Q ...
+    for q in range(1, Q):
+        stale = stale + rows[q] * sel[q]
+    acc = acc + stale * gscale
+    new_qsum = jnp.stack([rows[q] * (1.0 - sel[q]) for q in range(Q)])
+    return acc.astype(prev.dtype), new_qsum, new_qgamma
+
+
+def server_adam_math(prev, stacked, m, v, sizes, keep, scalars):
+    """The FedOpt server plane: weighted pseudo-gradient + one server-Adam
+    moment update + the model step, one pass.
+
+    prev: (n,); stacked: (K, n); m/v: (n,) f32; sizes/keep: (K,) f32;
+    scalars: (5,) f32 = [b1, b2, lr, tau, step] (step ALREADY
+    incremented). Returns (out, new_m, new_v).
+    """
+    b1, b2, lr, tau, step = (scalars[i] for i in range(5))
+    w, tot = _norm_weights(sizes, keep)
+    agg = jnp.zeros_like(prev, jnp.float32)
+    for k in range(stacked.shape[0]):       # same fused-chain pattern as
+        agg = agg + stacked[k].astype(jnp.float32) * w[k]    # server_mix
+    p32 = prev.astype(jnp.float32)
+    delta = jnp.where(tot > 0, agg - p32, 0.0)
+    new_m = b1 * m + (1.0 - b1) * delta
+    new_v = b2 * v + (1.0 - b2) * delta * delta
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+    update = (new_m / bc1) / (jnp.sqrt(new_v / bc2) + tau)
+    return (p32 + lr * update).astype(prev.dtype), new_m, new_v
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):

@@ -1,0 +1,401 @@
+"""Fused server-plane kernels: the COMPLETE server update in one HBM pass.
+
+The per-round server hot loop — staleness/participation weight
+computation from the schedule, weighted accumulation of the stacked
+(K, N) client params, the AMA mix (with the async ring buffer where the
+environment has delays), and the optional FedOpt server-Adam moment
+update — is purely HBM-bandwidth-bound at LLM scale. Before this module
+each stage was a separate jnp pass materialising (N,)/(K, N)/(Q, N)
+intermediates; here each round is ONE ``pl.pallas_call`` over a 1-D grid
+of flat parameter tiles:
+
+  * ``server_mix_flat``   — sync plane (ama / fedavg / fedprox):
+        streams K+1 rows in, 1 out; weights + alpha schedule in-kernel.
+  * ``server_async_flat`` — async plane (async_ama, Eqs. 6-11):
+        streams K+Q+1 rows in, Q+1 out; gamma^-(delays), ring-buffer
+        enqueue, slot pop and the alpha/beta/gamma mix fused.
+  * ``server_adam_flat``  — FedOpt server-Adam:
+        streams K+3 rows in, 3 out; pseudo-gradient, moments and the
+        model step fused.
+
+Each kernel body calls the SAME math as the pure-jnp oracle
+(``kernels/ref.py: server_*_math``), so interpret mode matches the
+reference to within 1-2 ulp (bit-exact up to XLA's shape-dependent
+multiply-add contraction); compiled TPU mode is allclose. The
+``server_*_tree`` drivers flatten a whole param pytree to one vector per
+dtype group (bf16 and f32 leaves keep their dtypes), so the engine
+dispatches ONE fused pass per round per dtype group instead of a chain
+of per-leaf jnp ops.
+
+Dispatch policy (``impl`` below / ``fl.server_plane``): the Pallas
+pallas_call is the TPU lowering; OFF-TPU the "fused" impl runs the
+jitted flat oracle instead — XLA CPU fuses the whole flat op sequence
+into one pass, which is where the measured CPU win comes from
+(BENCH_server_plane.json), while the Pallas INTERPRETER is a pure
+emulation layer that is orders of magnitude slower and exists only to
+validate the kernel body (impl="interpret", CI parity tests).
+
+Block sizing (TPU/interpret path): tiles are (block,) flat lanes;
+``(K + Q + 2) * block * 4`` bytes must fit VMEM on TPU (~16 MB) —
+128k lanes keeps K=10, Q=16 under that budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+DEFAULT_BLOCK = 128 * 1024
+
+__all__ = ["server_mix_flat", "server_async_flat", "server_adam_flat",
+           "server_mix_tree", "server_async_tree", "server_adam_tree",
+           "mix_coefs", "DEFAULT_BLOCK"]
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# The "ref" impl runs the oracle math under jit so XLA applies the same
+# multiply-add contraction it applies to the interpret-mode kernel body —
+# that (plus the shared op sequence) keeps ref == interpret within
+# 1-2 ulp even when called eagerly (contraction is shape-dependent, so
+# strict bit-equality across different blockings is not guaranteed).
+_ref_mix = jax.jit(ref.server_mix_math)
+_ref_async = jax.jit(ref.server_async_math)
+_ref_adam = jax.jit(ref.server_adam_math)
+
+
+def _route(impl: str) -> tuple[bool, bool]:
+    """Resolve an impl name to (use_pallas_kernel, interpret_flag):
+
+      "fused"     — the production path: pallas_call on TPU, the jitted
+                    flat oracle off-TPU (one XLA fusion; the Pallas
+                    INTERPRETER is emulation, not a perf path);
+      "ref"       — always the jitted flat oracle;
+      "interpret" — force the Pallas kernel through the interpreter
+                    (kernel-body validation in CI, 1-2 ulp vs "ref").
+    """
+    if impl == "interpret":
+        return True, True
+    if impl == "fused":
+        return not _interpret_default(), False
+    if impl != "ref":
+        raise ValueError(f"unknown server-plane impl {impl!r}")
+    return False, False
+
+
+def mix_coefs(fl, t, *, adaptive: bool = True):
+    """(4,) f32 = [alpha0, eta, alpha_cap, t] for ``server_mix_*``.
+    ``adaptive=False`` zeroes the schedule (fedavg/fedprox: alpha == 0)."""
+    tf = jnp.asarray(t, jnp.float32)
+    if not adaptive:
+        z = jnp.float32(0.0)
+        return jnp.stack([z, z, z, tf])
+    return jnp.stack([jnp.float32(fl.alpha0), jnp.float32(fl.eta),
+                      jnp.float32(fl.alpha_cap), tf])
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies: load the tile, run the SHARED oracle math, store
+# ---------------------------------------------------------------------------
+
+def _mix_kernel(prev_ref, stacked_ref, sizes_ref, keep_ref, coefs_ref,
+                out_ref):
+    out_ref[...] = ref.server_mix_math(
+        prev_ref[...], stacked_ref[...], sizes_ref[...], keep_ref[...],
+        coefs_ref[...])
+
+
+def _async_kernel(prev_ref, stacked_ref, qsum_ref, qgamma_ref, sizes_ref,
+                  delayed_ref, delays_ref, tq_ref, hyp_ref,
+                  out_ref, qsum_out_ref, qgamma_out_ref):
+    out, new_qsum, new_qgamma = ref.server_async_math(
+        prev_ref[...], stacked_ref[...], qsum_ref[...], qgamma_ref[...],
+        sizes_ref[...], delayed_ref[...], delays_ref[...], tq_ref[...],
+        hyp_ref[...])
+    out_ref[...] = out
+    qsum_out_ref[...] = new_qsum
+    qgamma_out_ref[...] = new_qgamma
+
+
+def _adam_kernel(prev_ref, stacked_ref, m_ref, v_ref, sizes_ref, keep_ref,
+                 scalars_ref, out_ref, m_out_ref, v_out_ref):
+    out, new_m, new_v = ref.server_adam_math(
+        prev_ref[...], stacked_ref[...], m_ref[...], v_ref[...],
+        sizes_ref[...], keep_ref[...], scalars_ref[...])
+    out_ref[...] = out
+    m_out_ref[...] = new_m
+    v_out_ref[...] = new_v
+
+
+# ---------------------------------------------------------------------------
+# flat wrappers: pad to the tile grid, one pallas_call, slice back
+# ---------------------------------------------------------------------------
+
+def _grid(N: int, block: int) -> tuple[int, int, int]:
+    block = min(block, N)
+    pad = (-N) % block
+    return block, pad, (N + pad) // block
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def server_mix_flat(prev, stacked, sizes, keep, coefs, *,
+                    block: int = DEFAULT_BLOCK, interpret: bool = False):
+    """prev: (N,); stacked: (K, N); sizes/keep: (K,) f32; coefs: (4,)."""
+    (N,) = prev.shape
+    K = stacked.shape[0]
+    block, pad, n_blocks = _grid(N, block)
+    if pad:
+        prev = jnp.pad(prev, (0, pad))
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((K, block), lambda i: (0, i)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(prev.shape, prev.dtype),
+        interpret=interpret,
+    )(prev, stacked, sizes, keep, coefs)
+    return out[:N] if pad else out
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def server_async_flat(prev, stacked, qsum, qgamma, sizes, delayed, delays,
+                      tq, hyp, *, block: int = DEFAULT_BLOCK,
+                      interpret: bool = False):
+    """prev: (N,); stacked: (K, N); qsum: (Q, N) f32; qgamma: (Q,) f32;
+    sizes/delayed: (K,) f32; delays: (K,) i32; tq: (2,) i32 = [t, t % Q];
+    hyp: (4,) f32 = [alpha0, eta, alpha_cap, staleness_b].
+    Returns (out (N,), new_qsum (Q, N) f32, new_qgamma (Q,) f32)."""
+    (N,) = prev.shape
+    K, Q = stacked.shape[0], qgamma.shape[0]
+    block, pad, n_blocks = _grid(N, block)
+    if pad:
+        prev = jnp.pad(prev, (0, pad))
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+        qsum = jnp.pad(qsum, ((0, 0), (0, pad)))
+    out, new_qsum, new_qgamma = pl.pallas_call(
+        _async_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((K, block), lambda i: (0, i)),
+            pl.BlockSpec((Q, block), lambda i: (0, i)),
+            pl.BlockSpec((Q,), lambda i: (0,)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((Q, block), lambda i: (0, i)),
+            pl.BlockSpec((Q,), lambda i: (0,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct(prev.shape, prev.dtype),
+            jax.ShapeDtypeStruct(qsum.shape, jnp.float32),
+            jax.ShapeDtypeStruct((Q,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(prev, stacked, qsum, qgamma, sizes, delayed, delays, tq, hyp)
+    if pad:
+        return out[:N], new_qsum[:, :N], new_qgamma
+    return out, new_qsum, new_qgamma
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def server_adam_flat(prev, stacked, m, v, sizes, keep, scalars, *,
+                     block: int = DEFAULT_BLOCK, interpret: bool = False):
+    """prev: (N,); stacked: (K, N); m/v: (N,) f32; sizes/keep: (K,) f32;
+    scalars: (5,) f32 = [b1, b2, lr, tau, step] (step pre-incremented).
+    Returns (out (N,), new_m (N,) f32, new_v (N,) f32)."""
+    (N,) = prev.shape
+    K = stacked.shape[0]
+    block, pad, n_blocks = _grid(N, block)
+    if pad:
+        prev = jnp.pad(prev, (0, pad))
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+        m = jnp.pad(m, (0, pad))
+        v = jnp.pad(v, (0, pad))
+    out, new_m, new_v = pl.pallas_call(
+        _adam_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((K, block), lambda i: (0, i)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((5,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct(prev.shape, prev.dtype),
+            jax.ShapeDtypeStruct(prev.shape, jnp.float32),
+            jax.ShapeDtypeStruct(prev.shape, jnp.float32),
+        ),
+        interpret=interpret,
+    )(prev, stacked, m, v, sizes, keep, scalars)
+    if pad:
+        return out[:N], new_m[:N], new_v[:N]
+    return out, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# tree drivers: whole param pytree -> one flat vector per dtype group ->
+# one kernel call per round per group
+# ---------------------------------------------------------------------------
+
+def _dtype_groups(leaves):
+    """Leaf indices grouped by dtype, insertion-ordered (usually 1 group)."""
+    groups: dict = {}
+    for i, x in enumerate(leaves):
+        groups.setdefault(jnp.asarray(x).dtype, []).append(i)
+    return groups
+
+
+def _cat(parts):
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
+
+
+def _split_back(flat, leaves_like, idxs, out_leaves):
+    lead = 1
+    for d in flat.shape[:-1]:       # leading (K,)/(Q,) axes, if any
+        lead *= d
+    off = 0
+    for i in idxs:
+        n = leaves_like[i].size // lead
+        out_leaves[i] = flat[..., off:off + n].reshape(leaves_like[i].shape)
+        off += n
+
+
+def _co_leaves(tree, treedef):
+    leaves, td = jax.tree.flatten(tree)
+    assert td == treedef, "co-tree structure mismatch"
+    return leaves
+
+
+def server_mix_tree(prev, stacked, sizes, keep, coefs, *, impl: str = "fused",
+                    block: int = DEFAULT_BLOCK):
+    """Sync server plane over pytrees. ``stacked`` leaves carry a leading
+    client axis. ``impl``: see ``_route``.
+
+    The kernel path flattens to one vector per dtype group — ONE
+    pallas_call per round per group (flat-staged production params make
+    the concat free). The oracle path runs the same single-pass math
+    per leaf: inside the round jit that costs no extra dispatch and
+    skips the concat/split copies, and per-ELEMENT the op sequence is
+    identical either way."""
+    kernel, interpret = _route(impl)
+    leaves_p, treedef = jax.tree.flatten(prev)
+    leaves_s = _co_leaves(stacked, treedef)
+    out_leaves = [None] * len(leaves_p)
+    if kernel:
+        for _, idxs in _dtype_groups(leaves_p).items():
+            K = leaves_s[idxs[0]].shape[0]
+            fp = _cat([leaves_p[i].reshape(-1) for i in idxs])
+            fs = _cat([leaves_s[i].reshape(K, -1) for i in idxs])
+            of = server_mix_flat(fp, fs, sizes, keep, coefs, block=block,
+                                 interpret=interpret)
+            _split_back(of, leaves_p, idxs, out_leaves)
+    else:
+        for i, (lp, ls) in enumerate(zip(leaves_p, leaves_s)):
+            of = ref.server_mix_math(lp.reshape(-1),
+                                     ls.reshape(ls.shape[0], -1),
+                                     sizes, keep, coefs)
+            out_leaves[i] = of.reshape(lp.shape)
+    return treedef.unflatten(out_leaves)
+
+
+def server_async_tree(prev, stacked, queue, sizes, delayed, delays, t, hyp,
+                      *, impl: str = "fused", block: int = DEFAULT_BLOCK):
+    """Async server plane over pytrees: one fused enqueue+pop+mix per
+    round. ``queue`` = {"sum": pytree with leading (Q,), "gamma": (Q,)}.
+    Returns (new_global, new_queue)."""
+    kernel, interpret = _route(impl)
+    qgamma = queue["gamma"]
+    Q = qgamma.shape[0]
+    tq = jnp.stack([jnp.asarray(t, jnp.int32),
+                    jnp.asarray(t, jnp.int32) % Q])
+    leaves_p, treedef = jax.tree.flatten(prev)
+    leaves_s = _co_leaves(stacked, treedef)
+    leaves_q = _co_leaves(queue["sum"], treedef)
+    out_leaves = [None] * len(leaves_p)
+    qs_leaves = [None] * len(leaves_p)
+    new_qgamma = qgamma
+    if kernel:
+        for _, idxs in _dtype_groups(leaves_p).items():
+            K = leaves_s[idxs[0]].shape[0]
+            fp = _cat([leaves_p[i].reshape(-1) for i in idxs])
+            fs = _cat([leaves_s[i].reshape(K, -1) for i in idxs])
+            fq = _cat([leaves_q[i].reshape(Q, -1) for i in idxs])
+            of, oq, new_qgamma = server_async_flat(
+                fp, fs, fq, qgamma, sizes, delayed, delays, tq, hyp,
+                block=block, interpret=interpret)
+            _split_back(of, leaves_p, idxs, out_leaves)
+            _split_back(oq, leaves_q, idxs, qs_leaves)
+    else:
+        for i, (lp, ls, lq) in enumerate(zip(leaves_p, leaves_s, leaves_q)):
+            of, oq, new_qgamma = ref.server_async_math(
+                lp.reshape(-1), ls.reshape(ls.shape[0], -1),
+                lq.reshape(Q, -1), qgamma, sizes, delayed, delays, tq, hyp)
+            out_leaves[i] = of.reshape(lp.shape)
+            qs_leaves[i] = oq.reshape(lq.shape)
+    return (treedef.unflatten(out_leaves),
+            {"sum": treedef.unflatten(qs_leaves), "gamma": new_qgamma})
+
+
+def server_adam_tree(prev, stacked, m, v, sizes, keep, scalars, *,
+                     impl: str = "fused", block: int = DEFAULT_BLOCK):
+    """FedOpt server plane over pytrees. ``m``/``v`` are f32 trees shaped
+    like ``prev``. Returns (new_global, new_m, new_v)."""
+    kernel, interpret = _route(impl)
+    leaves_p, treedef = jax.tree.flatten(prev)
+    leaves_s = _co_leaves(stacked, treedef)
+    leaves_m = _co_leaves(m, treedef)
+    leaves_v = _co_leaves(v, treedef)
+    out_leaves = [None] * len(leaves_p)
+    m_leaves = [None] * len(leaves_p)
+    v_leaves = [None] * len(leaves_p)
+    if kernel:
+        for _, idxs in _dtype_groups(leaves_p).items():
+            K = leaves_s[idxs[0]].shape[0]
+            fp = _cat([leaves_p[i].reshape(-1) for i in idxs])
+            fs = _cat([leaves_s[i].reshape(K, -1) for i in idxs])
+            fm = _cat([leaves_m[i].reshape(-1) for i in idxs])
+            fv = _cat([leaves_v[i].reshape(-1) for i in idxs])
+            of, om, ov = server_adam_flat(fp, fs, fm, fv, sizes, keep,
+                                          scalars, block=block,
+                                          interpret=interpret)
+            _split_back(of, leaves_p, idxs, out_leaves)
+            _split_back(om, leaves_m, idxs, m_leaves)
+            _split_back(ov, leaves_v, idxs, v_leaves)
+    else:
+        for i, (lp, ls, lm, lv) in enumerate(
+                zip(leaves_p, leaves_s, leaves_m, leaves_v)):
+            of, om, ov = ref.server_adam_math(
+                lp.reshape(-1), ls.reshape(ls.shape[0], -1),
+                lm.reshape(-1), lv.reshape(-1), sizes, keep, scalars)
+            out_leaves[i] = of.reshape(lp.shape)
+            m_leaves[i] = om.reshape(lm.shape)
+            v_leaves[i] = ov.reshape(lv.shape)
+    return (treedef.unflatten(out_leaves), treedef.unflatten(m_leaves),
+            treedef.unflatten(v_leaves))

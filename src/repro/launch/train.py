@@ -172,8 +172,17 @@ def main():
     ap.add_argument("--eval-every", type=int, default=1,
                     help="paper scale: eval cadence == scan chunk length")
     ap.add_argument("--use-kernel", action="store_true",
-                    help="route the server mix through the fused Pallas "
-                         "kernel (interpret-mode off-TPU)")
+                    help="route the LEGACY aggregate path's mix through "
+                         "the fused Pallas ama_mix (interpret-mode "
+                         "off-TPU); only meaningful with "
+                         "--server-plane legacy")
+    ap.add_argument("--server-plane", default="fused",
+                    choices=("fused", "ref", "interpret", "legacy"),
+                    help="server-update implementation: one fused pass "
+                         "per round (default; pallas on TPU, flat oracle "
+                         "off-TPU), the flat jnp oracle, the Pallas "
+                         "interpreter (validation only), or the "
+                         "pre-fusion per-leaf aggregate chain")
     ap.add_argument("--p-limited", type=float, default=0.25)
     ap.add_argument("--p-delay", type=float, default=0.0)
     ap.add_argument("--max-delay", type=int, default=0)
@@ -200,6 +209,7 @@ def main():
                   p_delay=args.p_delay, max_delay=args.max_delay,
                   trace_path=args.trace_path,
                   use_kernel=args.use_kernel,
+                  server_plane=args.server_plane,
                   cohorts=args.cohorts, local_steps=args.local_steps,
                   seed=args.seed)
     if args.scenario:
