@@ -1,0 +1,201 @@
+"""Client-plane benchmark: partitioned mixed-cohort FES execution vs the
+masked reference, swept over the limited-device ratio.
+
+Measures exactly what the round engine dispatches
+(``core.round.make_round_step`` with ``fl.client_plane`` =
+"partitioned" vs "masked") at two shapes:
+
+  * ``paper`` — the §V CNN at paper scale (m=10 cohorts); the masked
+    plane builds the full conv backward for every cohort and zeroes the
+    limited ones, the partitioned plane never traces it for the limited
+    group (Eq. 3);
+  * ``transformer`` — a reduced transformer pod shape (C cohorts, token
+    batches), where the frozen body is the whole block stack.
+
+Rounds are dispatched per round (a 1-round plan: the partition is the
+EXACT per-round split — the configuration ``run_round``, the pod
+``--no-scan`` loop and mixed-cadence chunks use; under long fused
+chunks the partition is chunk-static and the win shrinks toward the
+chunk-minimum limited count). Modes are ALTERNATED pass-by-pass
+(best-of-``reps``) so host contention hits both planes alike.
+
+Also lowers both programs dry-run and records HLO FLOP counts proving
+the limited program DROPS the body backward (strictly below the full
+program) instead of masking it.
+
+Emits ``BENCH_client_plane.json`` at the repo root with a ``smoke``
+section measured at the exact configuration the CI regression gate
+re-runs (``scripts/check_bench.py``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig, reduced
+from repro.configs.registry import ARCHS
+from repro.core.client import make_limited_local_train, make_local_train
+from repro.core.round import init_state, make_round_step
+from repro.data.pipeline import partition_plan
+from repro.data.synth import make_lm_tokens
+from repro.models.api import build_model
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                   "BENCH_client_plane.json")
+
+P_SWEEP = (0.0, 0.25, 0.5, 1.0)
+
+
+def _world(scale: str):
+    """(model, fl_base, batch (C, steps, b, ...)) for a benchmark shape."""
+    if scale == "paper":
+        model = build_model(ARCHS["paper-cnn"])
+        C, steps, b = 10, 4, 25
+        rng = np.random.RandomState(0)
+        batch = {"image": jnp.asarray(
+                     rng.randn(C, steps, b, 28, 28, 1), jnp.float32),
+                 "label": jnp.asarray(
+                     rng.randint(0, 10, (C, steps, b)), jnp.int32)}
+    else:  # transformer-like pod shape
+        cfg = reduced(ARCHS["minitron-8b"])
+        model = build_model(cfg)
+        C, steps, b, S = 4, 2, 2, 64
+        data = make_lm_tokens(C * steps * b, S + 1, cfg.vocab_size,
+                              n_topics=C, seed=0)
+        batch = {"tokens": jnp.asarray(
+            data["tokens"][:, :S].reshape(C, steps, b, S), jnp.int32)}
+    fl = FLConfig(algorithm="ama_fes", lr=0.05)
+    return model, fl, batch
+
+
+def _sched(C: int, p_limited: float, plan: bool):
+    """One round's schedule with an EXACT round(p*C) limited count (the
+    representative mixed cohort; a 1-round partition plan is exact)."""
+    rng = np.random.RandomState(1)
+    limited = np.zeros(C, bool)
+    limited[rng.permutation(C)[:int(round(p_limited * C))]] = True
+    sched = {"limited": jnp.asarray(limited),
+             "delayed": jnp.asarray(np.zeros(C, bool)),
+             "delays": jnp.asarray(np.ones(C, np.int32)),
+             "data_sizes": jnp.asarray(rng.rand(C) + 0.5, jnp.float32)}
+    if plan:
+        sched.update({k: jnp.asarray(v[0])
+                      for k, v in partition_plan(limited[None]).items()})
+    return sched
+
+
+def _measure(scale: str, p_limited: float, reps: int) -> dict:
+    model, fl, batch = _world(scale)
+    C = int(jax.tree.leaves(batch)[0].shape[0])
+    fns, states, scheds = {}, {}, {}
+    for plane in ("masked", "partitioned"):
+        flp = fl.with_(client_plane=plane)
+        step = make_round_step(model, flp)
+        fns[plane] = jax.jit(step)
+        states[plane] = init_state(model, flp, jax.random.PRNGKey(0))
+        scheds[plane] = _sched(C, p_limited, plan=(plane == "partitioned"))
+    best = {plane: float("inf") for plane in fns}
+    for plane, fn in fns.items():                # compile + warm
+        jax.block_until_ready(fn(states[plane], batch, scheds[plane]))
+    for _ in range(reps):                        # alternate passes
+        for plane, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(states[plane], batch, scheds[plane]))
+            best[plane] = min(best[plane], time.perf_counter() - t0)
+    return {"scale": scale, "p_limited": p_limited,
+            "masked_ms": round(best["masked"] * 1e3, 2),
+            "partitioned_ms": round(best["partitioned"] * 1e3, 2),
+            "speedup": round(best["masked"] / best["partitioned"], 3)}
+
+
+def _flop_counts(scale: str) -> dict:
+    """Dry-run HLO FLOPs of the full vs limited (classifier-only)
+    program on ONE cohort's batch: the limited program must cost
+    strictly less — the body backward is gone, not masked."""
+    model, fl, batch = _world(scale)
+    b1 = jax.tree.map(lambda x: x[:1], batch)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def flops(compiled):
+        ca = compiled.cost_analysis()
+        return float((ca if isinstance(ca, dict) else ca[0])["flops"])
+
+    full = flops(jax.jit(make_local_train(model, fl)).lower(
+        params, b1, jnp.asarray([True])).compile())
+    lim = flops(jax.jit(make_limited_local_train(model, fl)).lower(
+        params, b1).compile())
+    assert 0 < lim < full, (scale, lim, full)
+    return {"full_program_flops": full, "limited_program_flops": lim,
+            "limited_over_full": round(lim / full, 4)}
+
+
+def _sweep(cases, reps: int) -> list[dict]:
+    rows = []
+    for scale, p in cases:
+        row = _measure(scale, p, reps)
+        rows.append(row)
+        print(f"client_plane.{scale}.p{p},{row['speedup']},x partitioned "
+              f"over masked ({row['masked_ms']}ms -> "
+              f"{row['partitioned_ms']}ms)")
+    return rows
+
+
+# the CI gate re-runs the headline configuration only: the mixed cohort
+# at paper scale (p=0.5) — p=0 is parity-by-construction and p=1 is the
+# fes_static-shaped corner, both tracked in the committed full sweep
+SMOKE_CASES = [("paper", 0.5)]
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    reps = 3 if (smoke or quick) else 5
+    if smoke:
+        rows = _sweep(SMOKE_CASES, reps)
+        flops = _flop_counts("paper")
+        speedup = rows[0]["speedup"]
+        # variance-discounted floor for scripts/check_bench.py (~±20%
+        # wall-clock jitter on shared runners; the gate catches real
+        # plane regressions, not noise)
+        rec = {"rows": rows, "speedup": speedup,
+               "gate": round(speedup * 0.8, 3), "flops_paper": flops}
+        print(f"client_plane.smoke_speedup,{speedup},")
+        print(f"client_plane.limited_over_full_flops,"
+              f"{flops['limited_over_full']},<1 required")
+        return rec
+
+    rows = _sweep([(s, p) for s in ("paper", "transformer")
+                   for p in sorted(P_SWEEP)], reps)
+    flops = {s: _flop_counts(s) for s in ("paper", "transformer")}
+    headline = [r for r in rows
+                if r["scale"] == "paper" and r["p_limited"] == 0.5][0]
+    smoke_rows = _sweep(SMOKE_CASES, 3)
+    s_speedup = smoke_rows[0]["speedup"]
+    rec = {
+        "bench": "client_plane",
+        "backend": jax.default_backend(),
+        "rows": rows,
+        "flops": flops,
+        "headline": {"scale": "paper", "p_limited": 0.5,
+                     "speedup": headline["speedup"]},
+        "smoke": {"rows": smoke_rows, "speedup": s_speedup,
+                  "gate": round(s_speedup * 0.8, 3)},
+    }
+    for s, f in flops.items():
+        print(f"client_plane.{s}.limited_over_full_flops,"
+              f"{f['limited_over_full']},body backward dropped")
+    print(f"client_plane.headline,{headline['speedup']},x partitioned "
+          f"over masked at paper scale p_limited=0.5")
+    with open(OUT, "w") as f:
+        json.dump(rec, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(OUT)}")
+    return rec
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--full" not in sys.argv, smoke="--smoke" in sys.argv)

@@ -33,6 +33,9 @@ GATES = {
     "server_plane": ("BENCH_server_plane.json",
                      lambda rec: rec["geomean_speedup"],
                      lambda base: base["smoke"]["gate"]),
+    "client_plane": ("BENCH_client_plane.json",
+                     lambda rec: rec["speedup"],
+                     lambda base: base["smoke"]["gate"]),
 }
 
 

@@ -11,6 +11,7 @@ bit-identically, which is what makes ``--resume`` continuation exact
 from __future__ import annotations
 
 import os
+import uuid
 
 import jax
 import numpy as np
@@ -20,6 +21,14 @@ def _flatten(tree, prefix=""):
     out = {}
     if isinstance(tree, dict):
         for k, v in tree.items():
+            if "/" in str(k):
+                # '/' is the flat-key separator: {"a/b": x} and
+                # {"a": {"b": y}} would land on the SAME flat key and
+                # one leaf would silently overwrite the other
+                raise ValueError(
+                    f"checkpoint dict key {k!r} contains '/' — flat npz "
+                    "keys are '/'-joined paths, so such keys can collide "
+                    "with another leaf; rename the key")
             out.update(_flatten(v, f"{prefix}{k}/"))
     elif isinstance(tree, (list, tuple)):
         for i, v in enumerate(tree):
@@ -36,30 +45,60 @@ def _with_npz(path: str) -> str:
     return path if path.endswith(".npz") else path + ".npz"
 
 
+def _tmp_path(final: str) -> str:
+    """Per-writer-unique tmp name (.npz suffix: savez won't rename it).
+    A fixed name let two concurrent checkpointers of the same path
+    clobber each other's half-written tmp file before the rename."""
+    return f"{final}.{os.getpid()}.{uuid.uuid4().hex[:8]}.tmp.npz"
+
+
 def save(path: str, tree) -> None:
     final = _with_npz(path)
     os.makedirs(os.path.dirname(os.path.abspath(final)), exist_ok=True)
-    tmp = final + ".tmp.npz"           # .npz suffix: savez won't rename it
-    np.savez(tmp, **_flatten(tree))
-    os.replace(tmp, final)
+    flat = _flatten(tree)              # validate keys before touching disk
+    tmp = _tmp_path(final)
+    try:
+        np.savez(tmp, **flat)
+        os.replace(tmp, final)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
 
 
-def restore(path: str, like):
-    """Restore into the structure of ``like`` (dtypes preserved from disk)."""
+def restore(path: str, like, prefix: str = ""):
+    """Restore into the structure of ``like`` (dtypes preserved from
+    disk). Members are read lazily — only the flat keys ``like`` asks
+    for are decompressed, so restoring a subtree (``prefix``, e.g.
+    ``"params/"`` out of a round-state file) never materializes the
+    rest (optimizer moments, async ring buffers)."""
     with np.load(_with_npz(path)) as zf:
-        flat = dict(zf)
 
-    def rebuild(tree, prefix=""):
-        if isinstance(tree, dict):
-            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
-        if isinstance(tree, (list, tuple)):
-            vals = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
-            return type(tree)(vals)
-        leaf = flat[prefix[:-1]]
-        return jax.numpy.asarray(leaf).astype(tree.dtype) \
-            if hasattr(tree, "dtype") else jax.numpy.asarray(leaf)
+        def rebuild(tree, pfx):
+            if isinstance(tree, dict):
+                return {k: rebuild(v, f"{pfx}{k}/") for k, v in tree.items()}
+            if isinstance(tree, (list, tuple)):
+                vals = [rebuild(v, f"{pfx}{i}/") for i, v in enumerate(tree)]
+                return type(tree)(vals)
+            leaf = zf[pfx[:-1]]
+            return jax.numpy.asarray(leaf).astype(tree.dtype) \
+                if hasattr(tree, "dtype") else jax.numpy.asarray(leaf)
 
-    return rebuild(like)
+        return rebuild(like, prefix)
+
+
+def restore_params(path: str, like_params):
+    """Restore a PARAMS pytree from either a bare params checkpoint or a
+    full round-state file written by ``save_state`` (keys
+    ``params/...``-prefixed plus ``t``/``aux``). The serving path used
+    to call plain ``restore`` and KeyError on round-state files the
+    trainer's ``--checkpoint`` writes; this detects the round-state
+    layout and slices out the params subtree."""
+    with np.load(_with_npz(path)) as zf:
+        keys = set(zf.files)
+    if "t" in keys and any(k.startswith("params/") for k in keys):
+        return restore(path, like_params, prefix="params/")
+    return restore(path, like_params)
 
 
 def save_state(path: str, state: dict) -> None:

@@ -153,6 +153,20 @@ class FLConfig:
     #                 (kernel-body validation; slow, tests only)
     #   "legacy"    — the original per-leaf aggregate() chain
     server_plane: str = "fused"
+    # the client-plane execution mode for MIXED (limited x unlimited)
+    # cohorts (core.round.make_round_step; ``fes_static`` below is the
+    # third, all-limited mode):
+    #   "masked"      — ONE program for every cohort; limited cohorts
+    #                   compute the full body backward and mask it (the
+    #                   bit-identity reference under the chunked scan)
+    #   "partitioned" — group each round's cohorts by limited-ness at
+    #                   the staging layer and dispatch two vmapped
+    #                   programs: the masked program for the unlimited
+    #                   group and a classifier-only / statically
+    #                   truncated program for the limited group (the
+    #                   body backward is never traced — the paper's
+    #                   Eq. 3 computation reduction for real)
+    client_plane: str = "masked"
     fes_static: bool = False       # ALL cohorts computing-limited: classifier-
                                    # only differentiation (the body backward is
                                    # never built — paper §III at pod scale)

@@ -33,19 +33,30 @@ import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
 from repro.core import strategies
-from repro.core.client import make_fes_local_train, make_local_train
+from repro.core.client import (make_fes_local_train, make_local_train,
+                               make_partitioned_local_train)
 from repro.sharding.ctx import constrain_leading
+
+#: partitioned-client-plane dispatch arrays (data.pipeline.partition_plan)
+#: that ride the schedule dict when fl.client_plane == "partitioned"
+PARTITION_KEYS = ("part_full_idx", "part_lim_idx", "part_src_row",
+                  "part_from_lim")
 
 
 def as_scan_scheds(sb: dict) -> dict:
     """Device-ready scan schedules from a stacked ``Environment.batch``
     dict: keeps exactly the leaves the round body consumes (``selected``
     is host-side — it addresses client datasets, not cohort slots) and
-    re-types them for the scan carry."""
-    return {"limited": jnp.asarray(sb["limited"]),
-            "delayed": jnp.asarray(sb["delayed"]),
-            "delays": jnp.asarray(sb["delays"]),
-            "data_sizes": jnp.asarray(sb["data_sizes"], jnp.float32)}
+    re-types them for the scan carry. Partition-plan arrays (present
+    when the partitioned client plane is staged) pass through."""
+    out = {"limited": jnp.asarray(sb["limited"]),
+           "delayed": jnp.asarray(sb["delayed"]),
+           "delays": jnp.asarray(sb["delays"]),
+           "data_sizes": jnp.asarray(sb["data_sizes"], jnp.float32)}
+    for k in PARTITION_KEYS:
+        if k in sb:
+            out[k] = jnp.asarray(sb[k])
+    return out
 
 
 def init_state(model, fl: FLConfig, key, strategy=None):
@@ -61,19 +72,41 @@ def make_round_step(model, fl: FLConfig, strategy=None):
     """Returns round_step(state, batch, sched) -> (state, metrics).
 
     batch: pytree with leading (C, steps, b, ...) axes.
-    sched: {"limited","delayed","delays","data_sizes"} each (C,).
+    sched: {"limited","delayed","delays","data_sizes"} each (C,); with
+    ``fl.client_plane = "partitioned"`` also the ``PARTITION_KEYS``
+    dispatch arrays from ``data.pipeline.partition_plan`` (ChunkRunner
+    merges them in when it stages a chunk).
     """
     strategy = strategy or strategies.resolve(fl)
-    local_train = (make_fes_local_train(model, fl) if fl.fes_static
-                   else make_local_train(model, fl, strategy))
+    if fl.fes_static:
+        plane = make_fes_local_train(model, fl)
+        local_train = lambda g, b, sched: plane(g, b, sched["limited"])
+    elif getattr(fl, "client_plane", "masked") == "partitioned":
+        # two vmapped programs per round, grouped by limited-ness (the
+        # staging layer's partition_plan arrays ride in ``sched``) and
+        # scattered back into cohort-slot order before the server update
+        plane = make_partitioned_local_train(model, fl, strategy)
+
+        def local_train(g, b, sched):
+            if "part_src_row" not in sched:
+                raise KeyError(
+                    "client_plane='partitioned' needs the partition-plan "
+                    "arrays in sched — stage through ChunkRunner or merge "
+                    "data.pipeline.partition_plan(limited) yourself")
+            return plane(g, b, sched)
+    elif getattr(fl, "client_plane", "masked") == "masked":
+        plane = make_local_train(model, fl, strategy)
+        local_train = lambda g, b, sched: plane(g, b, sched["limited"])
+    else:
+        raise ValueError(f"unknown client_plane {fl.client_plane!r}; "
+                         "expected 'masked' or 'partitioned'")
 
     def round_step(state, batch, sched):
         t = state["t"]
         prev_global = state["params"]
         # stacked client axis over the FL mesh ("client"); no-op off-mesh
         batch = constrain_leading(batch, "client")
-        client_params, losses = local_train(prev_global, batch,
-                                            sched["limited"])
+        client_params, losses = local_train(prev_global, batch, sched)
         client_params = constrain_leading(client_params, "client")
         # ONE fused server-plane pass: staleness weights, delta
         # accumulation, ring-buffer mix and (fedopt) server-Adam in a

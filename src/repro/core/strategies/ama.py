@@ -26,6 +26,13 @@ class AMAStrategy(ServerStrategy):
             return masked_update(grads, fes_mask, limited)
         return grads
 
+    @property
+    def limited_mode(self) -> str:
+        """Partitioned plane: limited cohorts differentiate only the
+        classifier (Eq. 3) when FES is on — the executed counterpart of
+        the masked plane's zeroed body gradients."""
+        return "classifier" if self.fl.fes_enabled else "full"
+
     def aggregate(self, t, prev_global, client_params, sched, aux_state):
         on_time = jnp.logical_not(sched["delayed"])
         new_global = ama_aggregate(

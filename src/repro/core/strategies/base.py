@@ -94,6 +94,27 @@ class ServerStrategy:
         del limited
         return jnp.int32(n_steps)
 
+    # -------------------------------------- partitioned client plane ----
+    @property
+    def limited_mode(self) -> str:
+        """How a computing-limited cohort executes under the PARTITIONED
+        client plane (``fl.client_plane = "partitioned"``):
+
+          * ``"full"`` — the same gradients an unlimited cohort takes
+            (the base default: ``local_grad_transform`` applies no FES
+            mask, so the masked plane trains limited cohorts fully too);
+          * ``"classifier"`` — classifier-only differentiation: the body
+            backward is never traced (AMA-FES, paper Eq. 3).
+        """
+        return "full"
+
+    def static_local_steps(self, n_steps: int) -> int:
+        """Python-int local-step budget of a LIMITED cohort — the static
+        scan length of the partitioned plane's limited program. Must
+        agree with ``local_steps(n_steps, limited=True)`` (the masked
+        plane's traced cutoff) for the two planes to be equivalent."""
+        return n_steps
+
 
 _REGISTRY: dict[str, type[ServerStrategy]] = {}
 

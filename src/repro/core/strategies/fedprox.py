@@ -25,8 +25,14 @@ class FedProxStrategy(ServerStrategy):
             grads, params, global_params)
 
     def local_steps(self, n_steps: int, limited):
-        n_partial = max(1, int(self.fl.fedprox_partial * n_steps))
+        n_partial = self.static_local_steps(n_steps)
         return jnp.where(limited, jnp.int32(n_partial), jnp.int32(n_steps))
+
+    def static_local_steps(self, n_steps: int) -> int:
+        """Partial work: under the partitioned client plane a limited
+        cohort's program scans only this many steps — the masked plane
+        computes the full scan and discards the gradients instead."""
+        return max(1, int(self.fl.fedprox_partial * n_steps))
 
     def aggregate(self, t, prev_global, client_params, sched, aux_state):
         del t

@@ -16,6 +16,11 @@ therefore all see the same sample stream.
 single worker thread stages chunk k+1 while chunk k runs on device
 (depth-1 double buffering, so stateful environments are never entered
 concurrently).
+
+``partition_plan`` is the staging half of the PARTITIONED client plane
+(``fl.client_plane``): it groups each round's cohorts by FES
+limited-ness into static-width dispatch/scatter index arrays that ride
+the schedule dict into the compiled round.
 """
 from __future__ import annotations
 
@@ -93,6 +98,52 @@ def stage_chunk(data: dict, clients: list[ClientDataset],
                                         steps, batch_size)
                     for i in range(selected.shape[0])])
     return {k: v[idx] for k, v in data.items()}
+
+
+def partition_plan(limited: np.ndarray) -> dict:
+    """Host-side dispatch plan for the PARTITIONED client plane.
+
+    ``limited``: (n_rounds, C) bool — the chunk's stacked FES flags from
+    ``Environment.batch``. Groups each round's cohorts by limited-ness
+    into two programs with STATIC widths across the chunk (the fused
+    round scan needs one shape for every round):
+
+      * the limited (classifier-only / truncated) program takes
+        ``L = min`` limited count over the chunk's rounds;
+      * the full (masked) program takes the remaining ``U = C - L``
+        slots — unlimited cohorts plus any round's OVERFLOW limited
+        cohorts, which stay correct there (masked, just unreduced).
+
+    A 1-round chunk — the per-round fallback, ``run_round``, the pod
+    ``--no-scan`` loop — therefore gets the exact per-round split with
+    no overflow. Returned arrays (consumed by
+    ``core.client.make_partitioned_local_train`` via the schedule dict):
+
+      part_full_idx (n, U) — cohort slot feeding full-program row u
+      part_lim_idx  (n, L) — cohort slot feeding limited-program row l
+      part_src_row  (n, C) — slot c's row in its program's stacked output
+      part_from_lim (n, C) — True where that program is the limited one
+    """
+    limited = np.asarray(limited, bool)
+    if limited.ndim != 2:
+        raise ValueError(f"limited must be (n_rounds, C), got "
+                         f"{limited.shape}")
+    n, C = limited.shape
+    L = int(limited.sum(axis=1).min())
+    U = C - L
+    full_idx = np.zeros((n, U), np.int32)
+    lim_idx = np.zeros((n, L), np.int32)
+    src_row = np.zeros((n, C), np.int32)
+    from_lim = np.zeros((n, C), bool)
+    for i in range(n):
+        lim = np.flatnonzero(limited[i])[:L].astype(np.int32)
+        full = np.setdiff1d(np.arange(C, dtype=np.int32), lim)
+        lim_idx[i], full_idx[i] = lim, full
+        from_lim[i, lim] = True
+        src_row[i, lim] = np.arange(L, dtype=np.int32)
+        src_row[i, full] = np.arange(U, dtype=np.int32)
+    return {"part_full_idx": full_idx, "part_lim_idx": lim_idx,
+            "part_src_row": src_row, "part_from_lim": from_lim}
 
 
 class ChunkPrefetcher:

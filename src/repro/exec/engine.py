@@ -46,7 +46,7 @@ from repro.checkpoint.io import restore_state, save_state
 from repro.configs.base import FLConfig
 from repro.core import strategies
 from repro.core.round import as_scan_scheds, init_state, make_train_loop
-from repro.data.pipeline import ChunkPrefetcher, stage_chunk
+from repro.data.pipeline import ChunkPrefetcher, partition_plan, stage_chunk
 from repro.exec.evals import Evaluator
 
 
@@ -123,6 +123,15 @@ class ChunkRunner:
         1-2 ulp, which the bit-identity nets (and resume across chunk
         boundaries) do not tolerate.
         """
+        if (getattr(self.fl, "client_plane", "masked") == "partitioned"
+                and not self.fl.fes_static
+                and "part_src_row" not in sched_batch):
+            # partitioned client plane: group the chunk's cohorts by
+            # limited-ness host-side (the staging layer's other half);
+            # the plan is chunk-level so the fused scan and the
+            # per-round fallback replay the IDENTICAL dispatch
+            sched_batch = {**sched_batch,
+                           **partition_plan(sched_batch["limited"])}
         scheds = as_scan_scheds(sched_batch)
         n = int(jax.tree.leaves(scheds)[0].shape[0])
         batch = jax.tree.map(jnp.asarray, batch)

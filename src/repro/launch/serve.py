@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.io import restore
+from repro.checkpoint.io import restore_params
 from repro.configs.base import reduced
 from repro.configs.registry import serving_config
 from repro.models.api import build_model
@@ -59,7 +59,9 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     if args.checkpoint:
-        params = restore(args.checkpoint, params)
+        # accepts bare params files AND the {params, t, aux} round-state
+        # files the trainer's --checkpoint writes (params subtree sliced)
+        params = restore_params(args.checkpoint, params)
         print(f"restored {args.checkpoint}")
     rng = np.random.RandomState(0)
     prompts = jnp.asarray(

@@ -183,6 +183,14 @@ def main():
                          "off-TPU), the flat jnp oracle, the Pallas "
                          "interpreter (validation only), or the "
                          "pre-fusion per-leaf aggregate chain")
+    ap.add_argument("--client-plane", default="masked",
+                    choices=("masked", "partitioned"),
+                    help="mixed-cohort client execution: one masked "
+                         "program for every cohort (default; the "
+                         "bit-identity reference) or two programs "
+                         "grouped by FES limited-ness — limited cohorts "
+                         "never trace the body backward (real Eq. 3 "
+                         "computation reduction)")
     ap.add_argument("--p-limited", type=float, default=0.25)
     ap.add_argument("--p-delay", type=float, default=0.0)
     ap.add_argument("--max-delay", type=int, default=0)
@@ -210,6 +218,7 @@ def main():
                   trace_path=args.trace_path,
                   use_kernel=args.use_kernel,
                   server_plane=args.server_plane,
+                  client_plane=args.client_plane,
                   cohorts=args.cohorts, local_steps=args.local_steps,
                   seed=args.seed)
     if args.scenario:

@@ -1,11 +1,18 @@
-"""Local training engine: FedProx gradient + partial work."""
+"""Local training engine: FedProx gradient + partial work, the
+stale-loss fix, and the partitioned mixed-cohort FES client plane
+(partitioned vs masked equivalence net)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import FLConfig
 from repro.configs.registry import ARCHS
-from repro.core.client import make_local_train
+from repro.core.client import (make_limited_local_train, make_local_train,
+                               make_partitioned_local_train)
+from repro.core.round import init_state
+from repro.data.pipeline import partition_plan
+from repro.exec.engine import ChunkRunner
 from repro.models.api import build_model
 
 
@@ -66,3 +73,169 @@ def test_loss_decreases_over_local_steps():
     out2, loss2 = lt(params, big_batch, jnp.asarray([False]))
     assert float(loss2[0]) < float(loss[0]) + 0.1  # more steps, no blow-up
     assert np.isfinite(float(loss2[0]))
+
+
+def test_fedprox_limited_loss_excludes_stale_steps():
+    """Stale-loss regression: a fedprox_partial=0.5 limited cohort stops
+    updating after 2 of 4 steps but the scan keeps evaluating the loss at
+    the FROZEN params — the reported mean must cover the 2 ACTIVE steps
+    only (hand-rolled truncated scan), not average the stale tail in."""
+    model, params, batch, fl = _setup("fedprox", fedprox_partial=0.5,
+                                      fedprox_rho=0.0)
+    lt = jax.jit(make_local_train(model, fl))
+    _, loss = lt(params, batch, jnp.asarray([True]))
+
+    grad_fn = jax.value_and_grad(model.loss)
+    p, losses = params, []
+    for s in range(4):
+        mb = jax.tree.map(lambda x: x[0, s], batch)
+        l, g = grad_fn(p, mb)
+        losses.append(float(l))
+        if s < 2:                               # the active steps
+            p = jax.tree.map(
+                lambda pi, gi: (pi.astype(jnp.float32)
+                                - fl.lr * gi.astype(jnp.float32)
+                                ).astype(pi.dtype), p, g)
+    np.testing.assert_allclose(float(loss[0]), np.mean(losses[:2]),
+                               rtol=1e-6)
+    # the pre-fix value (all 4 losses, 2 of them at frozen params) is a
+    # DIFFERENT number — the bias this fix removes
+    assert abs(float(loss[0]) - np.mean(losses)) > 1e-6
+
+
+# ---------------------------------------------------------------------------
+# partitioned mixed-cohort client plane (fl.client_plane = "partitioned")
+# ---------------------------------------------------------------------------
+
+def _mixed_world(C=5, steps=3, b=8, seed=0):
+    cfg = ARCHS["paper-cnn"]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(seed)
+    batch = {"image": jnp.asarray(rng.randn(C, steps, b, 28, 28, 1),
+                                  jnp.float32),
+             "label": jnp.asarray(rng.randint(0, 10, (C, steps, b)),
+                                  jnp.int32)}
+    return model, params, batch
+
+
+def _part_sched(limited: np.ndarray) -> dict:
+    plan = partition_plan(np.asarray(limited)[None])
+    return {"limited": jnp.asarray(limited),
+            **{k: jnp.asarray(v[0]) for k, v in plan.items()}}
+
+
+@pytest.mark.parametrize("algorithm,kw", [
+    ("ama_fes", {}),
+    ("fedprox", dict(fedprox_partial=0.5, fedprox_rho=0.01)),
+    ("fedavg", {}),
+    ("fedopt", {}),
+])
+def test_partitioned_matches_masked_per_cohort(algorithm, kw):
+    """The equivalence net: for every strategy the partitioned plane's
+    per-cohort params/losses agree with the masked reference — EXACTLY
+    for unlimited cohorts (they run the identical program, just
+    gathered/scattered) and to fp tolerance for limited ones (the
+    classifier-only program contracts the same math without the body
+    backward)."""
+    model, params, batch = _mixed_world()
+    limited = np.array([True, False, True, False, False])
+    fl = FLConfig(algorithm=algorithm, lr=0.05, **kw)
+    m_params, m_loss = jax.jit(make_local_train(model, fl))(
+        params, batch, jnp.asarray(limited))
+    p_params, p_loss = jax.jit(make_partitioned_local_train(model, fl))(
+        params, batch, _part_sched(limited))
+    for c in range(len(limited)):
+        for a, b in zip(jax.tree.leaves(m_params),
+                        jax.tree.leaves(p_params)):
+            if limited[c]:
+                np.testing.assert_allclose(
+                    np.asarray(a[c], np.float32),
+                    np.asarray(b[c], np.float32), rtol=1e-6, atol=1e-7)
+            else:
+                np.testing.assert_array_equal(np.asarray(a[c]),
+                                              np.asarray(b[c]))
+    np.testing.assert_allclose(np.asarray(m_loss), np.asarray(p_loss),
+                               rtol=1e-6)
+
+
+def test_partitioned_scatter_is_permutation_invariant():
+    """Property: permuting the cohort slots (batch rows + limited flags)
+    permutes the partitioned plane's outputs the same way — the
+    gather/dispatch/scatter round-trip is slot-order oblivious."""
+    model, params, batch = _mixed_world()
+    limited = np.array([True, False, True, False, False])
+    fl = FLConfig(algorithm="ama_fes", lr=0.05)
+    lt = jax.jit(make_partitioned_local_train(model, fl))
+    base_params, base_loss = lt(params, batch, _part_sched(limited))
+    rng = np.random.RandomState(7)
+    for _ in range(3):
+        perm = rng.permutation(len(limited))
+        pb = jax.tree.map(lambda x: x[perm], batch)
+        perm_params, perm_loss = lt(params, pb, _part_sched(limited[perm]))
+        for a, b in zip(jax.tree.leaves(base_params),
+                        jax.tree.leaves(perm_params)):
+            np.testing.assert_allclose(np.asarray(a[perm], np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(base_loss)[perm],
+                                   np.asarray(perm_loss), rtol=1e-6)
+
+
+def _flops(compiled) -> float:
+    ca = compiled.cost_analysis()
+    return float((ca if isinstance(ca, dict) else ca[0])["flops"])
+
+
+def test_limited_program_drops_body_backward_flops():
+    """Dry-run HLO cost analysis: the partitioned plane's limited
+    program (classifier-only differentiation) must cost STRICTLY fewer
+    FLOPs than the full program on the same batch — the body backward
+    is gone, not merely masked."""
+    model, params, batch = _mixed_world(C=1)
+    fl = FLConfig(algorithm="ama_fes", lr=0.05)
+    full = jax.jit(make_local_train(model, fl)).lower(
+        params, batch, jnp.asarray([True])).compile()
+    lim = jax.jit(make_limited_local_train(model, fl)).lower(
+        params, batch).compile()
+    f, l = _flops(full), _flops(lim)
+    assert 0 < l < f, (l, f)
+
+
+def test_partitioned_engine_matches_masked_scan_and_loop():
+    """Mixed-cohort rounds through the execution engine: the partitioned
+    plane's global params track the masked chunked-scan reference under
+    BOTH the chunked scan and the scan-of-1 fallback, with per-round
+    limited counts that vary (exercising the chunk-static overflow
+    path: excess limited cohorts run the masked program)."""
+    model, params, _ = _mixed_world()
+    rng = np.random.RandomState(3)
+    n, C, steps, b = 3, 4, 2, 4
+    batch = {"image": rng.randn(n, C, steps, b, 28, 28, 1).astype(
+                 np.float32),
+             "label": rng.randint(0, 10, (n, C, steps, b)).astype(
+                 np.int32)}
+    limited = np.array([[1, 0, 1, 0], [0, 0, 0, 1], [1, 1, 0, 1]], bool)
+    sb = {"limited": limited,
+          "delayed": np.zeros((n, C), bool),
+          "delays": np.ones((n, C), np.int32),
+          "data_sizes": rng.rand(n, C).astype(np.float32) + 0.5}
+
+    def run(plane, use_scan):
+        fl = FLConfig(algorithm="fedprox", lr=0.05, fedprox_partial=0.5,
+                      client_plane=plane)
+        runner = ChunkRunner(model, fl, per_round_batch=True,
+                             use_scan=use_scan, donate=False)
+        state = init_state(model, fl, jax.random.PRNGKey(0))
+        return runner.run_chunk(state, batch, dict(sb))
+
+    ref_state, ref_metrics = run("masked", True)
+    for use_scan in (True, False):
+        st, m = run("partitioned", use_scan)
+        for a, b2 in zip(jax.tree.leaves(ref_state["params"]),
+                         jax.tree.leaves(st["params"])):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b2, np.float32),
+                                       rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(m["loss"], ref_metrics["loss"],
+                                   rtol=1e-5)

@@ -1,9 +1,15 @@
-"""Optimizers + checkpoint round-trip."""
+"""Optimizers + checkpoint round-trip (incl. the flat-key collision,
+unique-tmp-name and round-state-into-serving regressions)."""
+import os
+import threading
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint.io import restore, save
+from repro.checkpoint import io
+from repro.checkpoint.io import restore, restore_params, save, save_state
 from repro.optim import adam, apply_updates, sgd
 
 
@@ -44,3 +50,86 @@ def test_checkpoint_roundtrip(tmp_path):
         assert a.dtype == b.dtype
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
+
+
+def test_flatten_rejects_slash_keys(tmp_path):
+    """{"a/b": x} and {"a": {"b": y}} land on the SAME flat npz key —
+    the old _flatten silently merged them (one leaf lost). Now a clear
+    error, raised before anything touches disk."""
+    tree = {"a/b": jnp.ones(2), "a": {"b": jnp.zeros(2)}}
+    path = str(tmp_path / "bad.npz")
+    with pytest.raises(ValueError, match="contains '/'"):
+        save(path, tree)
+    assert list(tmp_path.iterdir()) == []        # no file, no tmp litter
+
+
+def test_save_tmp_name_unique_per_writer(tmp_path):
+    """Two concurrent checkpointers of the same path must not clobber
+    each other's tmp file: tmp names are per-writer unique, and the
+    final file is always ONE writer's complete tree."""
+    final = str(tmp_path / "c.npz")
+    names = {io._tmp_path(final) for _ in range(8)}
+    assert len(names) == 8
+    trees = [{"w": jnp.full((64,), float(i))} for i in range(2)]
+    errs = []
+
+    def writer(tree):
+        try:
+            for _ in range(20):
+                save(final, tree)
+        except Exception as e:                   # surfaces on the main thread
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer, args=(t,)) for t in trees]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errs == []
+    back = np.asarray(restore(final, trees[0])["w"])
+    assert float(back[0]) in (0.0, 1.0)          # one writer's tree ...
+    assert np.all(back == back[0])               # ... and not interleaved
+    assert [p for p in os.listdir(tmp_path) if ".tmp" in p] == []
+
+
+def test_restore_params_from_round_state_into_serving(tmp_path):
+    """serve --checkpoint regression: the trainer's save_state writes
+    {params, t, aux} with params/...-prefixed keys, which plain
+    restore(path, params) KeyErrors on. restore_params detects the
+    round-state layout, slices the params subtree, and the result
+    actually serves (greedy decode)."""
+    from repro.configs.base import FLConfig, reduced
+    from repro.configs.registry import ARCHS
+    from repro.core.round import init_state
+    from repro.launch.serve import batched_decode
+    from repro.models.api import build_model
+
+    cfg = reduced(ARCHS["minitron-8b"])
+    model = build_model(cfg)
+    fl = FLConfig(algorithm="fedopt")            # stateful aux: Adam moments
+    state = init_state(model, fl, jax.random.PRNGKey(0))
+    state["t"] = jnp.asarray(7, jnp.int32)
+    path = str(tmp_path / "round_state.npz")
+    save_state(path, state)
+
+    fresh = model.init(jax.random.PRNGKey(1))
+    with pytest.raises(KeyError):                # the bug this fixes
+        restore(path, fresh)
+    back = restore_params(path, fresh)
+    for a, b in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # bare params checkpoints still restore through the same entry point
+    bare = str(tmp_path / "params_only.npz")
+    save(bare, state["params"])
+    back2 = restore_params(bare, fresh)
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(back2)[0], np.float32),
+        np.asarray(jax.tree.leaves(state["params"])[0], np.float32))
+    # and the restored params drive the serving path
+    prompts = jnp.asarray([[1, 2]], jnp.int32)
+    out = batched_decode(model, back, prompts, max_new=2, max_len=8)
+    assert out.shape == (1, 4)
+    assert np.all(np.asarray(out) >= 0)
