@@ -1,0 +1,151 @@
+"""Federation-scale sweep: rounds/sec vs population size K x cohort C.
+
+The point of the virtual-population machinery (``repro.env.virtual``,
+``data.pipeline.VirtualClientShards``) is that per-round scheduling +
+staging cost grows with the COHORT size C, not the population size K —
+a 10^6-client federation rounds as fast as a 10^3-client one. This sweep
+measures exactly that claim end-to-end through the chunked-scan engine
+(``FederatedSimulation``): K in {10^3, 10^4, 10^5, 10^6} x C in
+{5, 32, 128}, with ``population="auto"`` choosing the realisation the
+engine would really use at each K (dense below VIRTUAL_K_MIN, hashed
+virtual above). Reported per cell:
+
+  * ``rounds_per_sec``      — end-to-end engine throughput;
+  * ``sched_stage_ms``      — host-side schedule + staging cost per
+                              round (the O(K) -> O(C) claim in isolation);
+  * ``sublinearity``        — per C, rounds/sec at K=10^6 over K=10^3
+                              (~1.0 when scheduling is population-free).
+
+Emits ``BENCH_federation_scale.json`` at the repo root; the ``--smoke``
+configuration (K in {10^3, 10^6}, C=5) is re-run by
+``scripts/check_bench.py`` as a CI regression gate on ``scale_ratio``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.configs.base import FLConfig
+from repro.configs.registry import ARCHS
+from repro.core.simulation import FederatedSimulation
+from repro.data.pipeline import VirtualClientShards
+from repro.data.synth import make_image_classification
+from repro.models.api import build_model
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                   "BENCH_federation_scale.json")
+
+#: every client owns a fixed-size shard view of the shared base store,
+#: so steps/round (and therefore the compiled program) is identical
+#: across the whole K sweep — only scheduling/staging cost can differ
+SHARD_SIZE = 32
+
+POPULATIONS = (1_000, 10_000, 100_000, 1_000_000)
+COHORTS = (5, 32, 128)
+
+
+def _fl(K: int, C: int) -> FLConfig:
+    return FLConfig(num_clients=K, clients_per_round=C,
+                    local_epochs=1, local_batch_size=16, lr=0.1,
+                    algorithm="ama_fes", env="bernoulli",
+                    p_delay=0.3, max_delay=6, population="auto", seed=0)
+
+
+def _cell(model, train, test, K: int, C: int, *, rounds: int,
+          reps: int) -> dict:
+    fl = _fl(K, C)
+    clients = VirtualClientShards(train, K, shard_size=SHARD_SIZE,
+                                  seed=fl.seed)
+    sim = FederatedSimulation(model, fl, clients, test)
+    # host-side cost in isolation: schedule draw + chunk staging
+    sim._stage(0, rounds)                               # warm (GE memo etc.)
+    t0 = time.time()
+    for _ in range(max(reps, 2)):
+        sim._stage(0, rounds)
+    sched_stage_ms = (time.time() - t0) / max(reps, 2) / rounds * 1e3
+    # end-to-end engine throughput (compile + warm first)
+    sim.run(rounds=rounds, eval_every=rounds)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        sim.run(rounds=rounds, eval_every=rounds)
+        best = min(best, time.time() - t0)
+    return {"population": "virtual" if sim.env.virtual else "dense",
+            "rounds_per_sec": round(rounds / best, 3),
+            "per_round_ms": round(best / rounds * 1e3, 2),
+            "sched_stage_ms": round(sched_stage_ms, 3)}
+
+
+SMOKE = dict(rounds=4, reps=2, n_train=1024, cohort=5,
+             populations=(1_000, 1_000_000))
+
+
+def _smoke_rec(*, rounds, reps, n_train, cohort, populations) -> dict:
+    model = build_model(ARCHS["paper-cnn"])
+    train, test = make_image_classification(n_train=n_train, n_test=256,
+                                            seed=0)
+    cells = {K: _cell(model, train, test, K, cohort, rounds=rounds,
+                      reps=reps) for K in populations}
+    lo, hi = populations[0], populations[-1]
+    ratio = round(cells[hi]["rounds_per_sec"]
+                  / max(cells[lo]["rounds_per_sec"], 1e-9), 3)
+    return {"cohort": cohort,
+            "cells": {str(K): c for K, c in cells.items()},
+            "scale_ratio": ratio, "gate": round(ratio * 0.8, 3)}
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    if smoke:
+        rec = _smoke_rec(**SMOKE)
+        lo, hi = (str(K) for K in SMOKE["populations"])
+        print(f"federation_scale.rps_k1e3,"
+              f"{rec['cells'][lo]['rounds_per_sec']},")
+        print(f"federation_scale.rps_k1e6,"
+              f"{rec['cells'][hi]['rounds_per_sec']},")
+        print(f"federation_scale.scale_ratio,{rec['scale_ratio']},"
+              f"rounds/sec at K=1e6 over K=1e3 (smoke; ~1.0 = "
+              f"population-free scheduling)")
+        return rec
+
+    rounds, reps = (4 if quick else 8), (2 if quick else 3)
+    model = build_model(ARCHS["paper-cnn"])
+    train, test = make_image_classification(n_train=2048, n_test=256,
+                                            seed=0)
+    grid: dict[str, dict] = {}
+    for C in COHORTS:
+        for K in POPULATIONS:
+            cell = _cell(model, train, test, K, C, rounds=rounds,
+                         reps=reps)
+            grid[f"K{K}_C{C}"] = cell
+            print(f"federation_scale.K{K}_C{C},"
+                  f"{cell['rounds_per_sec']},rounds/sec "
+                  f"({cell['population']}, sched+stage "
+                  f"{cell['sched_stage_ms']} ms/round)")
+    sub = {f"C{C}": round(grid[f"K{POPULATIONS[-1]}_C{C}"]["rounds_per_sec"]
+                          / max(grid[f"K{POPULATIONS[0]}_C{C}"]
+                                ["rounds_per_sec"], 1e-9), 3)
+           for C in COHORTS}
+    for c, r in sub.items():
+        print(f"federation_scale.sublinearity_{c},{r},rps(K=1e6)/rps(K=1e3)")
+    rec = {"bench": "federation_scale", "arch": "paper-cnn",
+           "algorithm": "ama_fes", "env": "bernoulli",
+           "shard_size": SHARD_SIZE, "rounds": rounds,
+           "populations": list(POPULATIONS), "cohorts": list(COHORTS),
+           "grid": grid, "sublinearity": sub}
+    # CI regression-gate baseline: the exact configuration the smoke
+    # gate re-runs (scripts/check_bench.py), variance-discounted
+    s = _smoke_rec(**SMOKE)
+    rec["smoke"] = {"scale_ratio": s["scale_ratio"], "gate": s["gate"]}
+    print(f"federation_scale.smoke_scale_ratio,{s['scale_ratio']},"
+          f"gate baseline {s['gate']}")
+    with open(OUT, "w") as f:
+        json.dump(rec, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(OUT)}")
+    return rec
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--full" not in sys.argv, smoke="--smoke" in sys.argv)

@@ -36,6 +36,12 @@ GATES = {
     "client_plane": ("BENCH_client_plane.json",
                      lambda rec: rec["speedup"],
                      lambda base: base["smoke"]["gate"]),
+    # scale_ratio = rounds/sec at K=1e6 over K=1e3 (~1.0 when per-round
+    # scheduling+staging is population-free); an O(K) regression in the
+    # virtual-population path drags it toward 0 and trips the gate
+    "federation_scale": ("BENCH_federation_scale.json",
+                         lambda rec: rec["scale_ratio"],
+                         lambda base: base["smoke"]["gate"]),
 }
 
 

@@ -127,6 +127,21 @@ class FLConfig:
     bw_deadline_s: float = 1.0     # round deadline (seconds)
     # trace: .npz replay path ("" -> synthetic mobility trace)
     trace_path: str = ""
+    # population realisation (repro.env.virtual): "auto" keeps the dense
+    # bit-identical paper path up to VIRTUAL_K_MIN clients and switches
+    # to the K-free hashed VirtualPopulation machinery above it;
+    # "dense"/"virtual" force either at any K
+    population: str = "auto"
+    # staging look-ahead: how many chunks ChunkPrefetcher keeps in
+    # flight ahead of the device (host memory ~ depth x chunk bytes)
+    prefetch_depth: int = 1
+    # pre-reduce the stacked (C, N) client plane to the (N,) weighted
+    # sums the server planes actually consume BEFORE the server update,
+    # so the cross-device collective moves N, not C x N, bytes:
+    #   "auto"  — on when the active mesh's client axis is > 1
+    #   "off"   — always the stacked fused path
+    #   "force" — always reduce (CPU equivalence tests)
+    client_reduce: str = "auto"
     # server strategy name (see repro.core.strategies registry):
     # "ama" (alias "ama_fes") | "async_ama" | "fedavg" | "fedprox" | "fedopt"
     algorithm: str = "ama_fes"

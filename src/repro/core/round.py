@@ -35,7 +35,7 @@ from repro.configs.base import FLConfig
 from repro.core import strategies
 from repro.core.client import (make_fes_local_train, make_local_train,
                                make_partitioned_local_train)
-from repro.sharding.ctx import constrain_leading
+from repro.sharding.ctx import axis_size, constrain_leading
 
 #: partitioned-client-plane dispatch arrays (data.pipeline.partition_plan)
 #: that ride the schedule dict when fl.client_plane == "partitioned"
@@ -108,11 +108,29 @@ def make_round_step(model, fl: FLConfig, strategy=None):
         batch = constrain_leading(batch, "client")
         client_params, losses = local_train(prev_global, batch, sched)
         client_params = constrain_leading(client_params, "client")
-        # ONE fused server-plane pass: staleness weights, delta
-        # accumulation, ring-buffer mix and (fedopt) server-Adam in a
-        # single kernel dispatch (fl.server_plane selects the impl)
-        new_params, aux = strategy.fused_server_update(
-            t, prev_global, client_params, sched, state["aux"])
+        # pre-reduce the stacked client axis when it is actually
+        # distributed (fl.client_reduce: "auto" checks the ACTIVE mesh at
+        # trace time; "force" for CPU equivalence tests): the weighted
+        # delta reduction happens BEFORE the server plane, so the
+        # per-round collective moves N, not C x N, bytes. On a 1-device
+        # mesh "auto" stays off and the fused plane keeps its
+        # bit-identity contract.
+        mode = getattr(fl, "client_reduce", "auto")
+        new_params = aux = None
+        if mode == "force" or (mode == "auto" and axis_size("client") > 1):
+            out = strategy.reduced_server_update(
+                t, prev_global, client_params, sched, state["aux"])
+            if out is not NotImplemented:
+                new_params, aux = out
+        elif mode not in ("auto", "off"):
+            raise ValueError(f"unknown client_reduce {mode!r}; "
+                             "expected 'auto' | 'off' | 'force'")
+        if new_params is None:
+            # ONE fused server-plane pass: staleness weights, delta
+            # accumulation, ring-buffer mix and (fedopt) server-Adam in
+            # a single kernel dispatch (fl.server_plane selects the impl)
+            new_params, aux = strategy.fused_server_update(
+                t, prev_global, client_params, sched, state["aux"])
         on_time = jnp.logical_not(sched["delayed"])
         metrics = {"loss": jnp.mean(losses),
                    "n_on_time": jnp.sum(on_time.astype(jnp.int32))}

@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.ama import ama_aggregate
-from repro.core.strategies.base import ServerStrategy, register
+from repro.core.strategies.base import (ServerStrategy, reduced_mix_update,
+                                        register)
 from repro.optim.masked import masked_update
 
 
@@ -51,3 +52,12 @@ class AMAStrategy(ServerStrategy):
             prev_global, client_params, sched["data_sizes"], keep,
             mix_coefs(self.fl, t), impl=self.server_impl)
         return new_global, aux_state
+
+    def reduced_server_update(self, t, prev_global, client_params, sched,
+                              aux_state):
+        fl = self.fl
+        alpha = jnp.minimum(fl.alpha0 + fl.eta
+                            * jnp.asarray(t, jnp.float32), fl.alpha_cap)
+        keep = jnp.logical_not(sched["delayed"]).astype(jnp.float32)
+        return reduced_mix_update(prev_global, client_params, sched, keep,
+                                  alpha), aux_state

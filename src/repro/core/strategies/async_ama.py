@@ -7,6 +7,7 @@ through the fused ``lax.scan`` engine) instead of living as a special
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import async_ama
@@ -47,3 +48,55 @@ class AsyncAMAStrategy(AMAStrategy):
             sched["data_sizes"], sched["delayed"].astype(jnp.float32),
             sched["delays"], t, hyp, impl=self.server_impl)
         return new_global, {"queue": queue}
+
+    def reduced_server_update(self, t, prev_global, client_params, sched,
+                              aux_state):
+        """``kernels.ref.server_async_math`` with the client axis
+        pre-reduced: the on-time aggregate AND the Q ring-buffer enqueue
+        sums are ONE (C, 1+Q) ``reduce_leading`` contraction, so the
+        per-round collective moves (1+Q) x N bytes instead of C x N."""
+        from repro.kernels.ref import _norm_weights
+        from repro.sharding.ctx import reduce_leading
+        fl = self.fl
+        queue = aux_state["queue"]
+        Q = queue["gamma"].shape[0]
+        tt = jnp.asarray(t, jnp.int32)
+        delayed = sched["delayed"].astype(jnp.float32)
+        delays = sched["delays"]
+
+        alpha_un = 1.0 - jax.nn.sigmoid(1.0)                    # Eq. 9
+        g = (fl.staleness_b * jax.nn.sigmoid(-delays.astype(jnp.float32))
+             * delayed)                                         # gamma^-
+        arrival = (tt + delays) % Q
+        onehot = (arrival[:, None] == jnp.arange(Q)[None, :]
+                  ).astype(jnp.float32) * g[:, None]            # (C, Q)
+        qg = queue["gamma"] + jnp.sum(onehot, axis=0)
+        sel = (jnp.arange(Q) == tt % Q).astype(jnp.float32)     # pop mask
+        stale_gamma = jnp.sum(qg * sel)
+        new_qgamma = qg * (1.0 - sel)
+
+        A = jnp.minimum(fl.alpha0 + fl.eta * tt.astype(jnp.float32),
+                        fl.alpha_cap)
+        beta = 1.0 - A
+        denom = alpha_un + stale_gamma
+        alpha = alpha_un / denom * A                            # Eq. 10
+        gscale = A / denom                                      # Eq. 11
+        w, tot = _norm_weights(sched["data_sizes"], 1.0 - delayed)
+        a_eff = jnp.where(tot > 0, alpha, alpha + beta)
+
+        # col 0: beta-weighted on-time aggregate; cols 1..Q: enqueue
+        W = jnp.concatenate([(beta * w)[:, None], onehot], axis=1)
+        red = reduce_leading(client_params, W)        # leaves (1+Q, ...)
+        rows = jax.tree.map(lambda qs, r: qs + r[1:], queue["sum"], red)
+
+        def selb(x):
+            return sel.reshape((Q,) + (1,) * (x.ndim - 1))
+
+        new_params = jax.tree.map(
+            lambda p, r, rw: (p.astype(jnp.float32) * a_eff + r[0]
+                              + jnp.sum(rw * selb(rw), axis=0) * gscale
+                              ).astype(p.dtype),
+            prev_global, red, rows)
+        new_qsum = jax.tree.map(lambda rw: rw * (1.0 - selb(rw)), rows)
+        return new_params, {"queue": {"sum": new_qsum,
+                                      "gamma": new_qgamma}}

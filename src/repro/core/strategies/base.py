@@ -76,6 +76,25 @@ class ServerStrategy:
         return self.aggregate(t, prev_global, client_params, sched,
                               aux_state)
 
+    def reduced_server_update(self, t, prev_global, client_params, sched,
+                              aux_state):
+        """The server update with the stacked client axis PRE-REDUCED.
+
+        Every built-in server plane consumes ``client_params`` only
+        through weighted sums over the client axis, so on a mesh whose
+        "client" axis is sharded the engine can contract (C, N) -> (N,)
+        (``sharding.ctx.reduce_leading``) BEFORE the server math — the
+        per-round cross-device collective then moves N, not C x N,
+        bytes. Same signature/contract as ``aggregate``; numerically
+        allclose to (not bit-identical with) the fused plane's
+        sequential multiply-add chains, which is why the round engine
+        only dispatches here when ``fl.client_reduce`` asks for it
+        ("auto" = the active mesh's client axis is > 1). Return
+        ``NotImplemented`` (the base default) to always use the fused
+        plane."""
+        del t, prev_global, client_params, sched, aux_state
+        return NotImplemented
+
     @property
     def server_impl(self) -> str:
         """The configured server-plane implementation."""
@@ -114,6 +133,26 @@ class ServerStrategy:
         agree with ``local_steps(n_steps, limited=True)`` (the masked
         plane's traced cutoff) for the two planes to be equivalent."""
         return n_steps
+
+
+def reduced_mix_update(prev_global, client_params, sched, keep, alpha):
+    """The mix-family server plane (``kernels.ref.server_mix_math``)
+    with the client axis pre-reduced: out = a_eff*prev + sum_k
+    (beta*w_k)*x_k, where the weighted sum is ONE ``reduce_leading``
+    contraction (an N-byte collective on a sharded mesh). Shared by
+    ama/fedavg/fedprox, which differ only in ``keep`` and the alpha
+    schedule."""
+    import jax
+
+    from repro.kernels.ref import _norm_weights
+    from repro.sharding.ctx import reduce_leading
+    beta = 1.0 - alpha
+    w, tot = _norm_weights(sched["data_sizes"], keep)
+    a_eff = jnp.where(tot > 0, alpha, alpha + beta)
+    red = reduce_leading(client_params, beta * w)
+    return jax.tree.map(
+        lambda p, r: (p.astype(jnp.float32) * a_eff + r).astype(p.dtype),
+        prev_global, red)
 
 
 _REGISTRY: dict[str, type[ServerStrategy]] = {}

@@ -6,7 +6,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.ama import fedavg_aggregate
-from repro.core.strategies.base import ServerStrategy, register
+from repro.core.strategies.base import (ServerStrategy,
+                                        reduced_mix_update, register)
 
 
 @register
@@ -37,3 +38,13 @@ class FedAvgStrategy(ServerStrategy):
             prev_global, client_params, sched["data_sizes"], keep,
             mix_coefs(self.fl, t, adaptive=False), impl=self.server_impl)
         return new_global, aux_state
+
+    def reduced_server_update(self, t, prev_global, client_params, sched,
+                              aux_state):
+        del t
+        keep = jnp.logical_and(
+            jnp.logical_not(sched["delayed"]),
+            jnp.logical_not(sched["limited"])).astype(jnp.float32)
+        # alpha = 0: the plain weighted average corner of the mix plane
+        return reduced_mix_update(prev_global, client_params, sched, keep,
+                                  jnp.float32(0.0)), aux_state

@@ -88,3 +88,39 @@ class FedOptStrategy(AMAStrategy):
             prev_global, client_params, aux_state["m"], aux_state["v"],
             sched["data_sizes"], keep, scalars, impl=self.server_impl)
         return new_global, {"m": m, "v": v, "step": step}
+
+    def reduced_server_update(self, t, prev_global, client_params, sched,
+                              aux_state):
+        """``kernels.ref.server_adam_math`` with the pseudo-gradient
+        aggregate pre-reduced over the client axis (one N-byte
+        contraction); the Adam moment update is elementwise on (N,)."""
+        del t
+        from repro.kernels.ref import _norm_weights
+        from repro.sharding.ctx import reduce_leading
+        fl = self.fl
+        keep = jnp.logical_not(sched["delayed"]).astype(jnp.float32)
+        w, tot = _norm_weights(sched["data_sizes"], keep)
+        agg = reduce_leading(client_params, w)
+        step = aux_state["step"] + 1
+        sf = step.astype(jnp.float32)
+        bc1 = 1.0 - fl.server_b1 ** sf
+        bc2 = 1.0 - fl.server_b2 ** sf
+
+        def delta(p, a):
+            return jnp.where(tot > 0, a - p.astype(jnp.float32), 0.0)
+
+        m = jax.tree.map(
+            lambda mm, p, a: fl.server_b1 * mm
+            + (1.0 - fl.server_b1) * delta(p, a),
+            aux_state["m"], prev_global, agg)
+        v = jax.tree.map(
+            lambda vv, p, a: fl.server_b2 * vv
+            + (1.0 - fl.server_b2) * delta(p, a) ** 2,
+            aux_state["v"], prev_global, agg)
+        new_params = jax.tree.map(
+            lambda p, mm, vv: (p.astype(jnp.float32) + fl.server_lr
+                               * (mm / bc1)
+                               / (jnp.sqrt(vv / bc2) + fl.server_tau)
+                               ).astype(p.dtype),
+            prev_global, m, v)
+        return new_params, {"m": m, "v": v, "step": step}

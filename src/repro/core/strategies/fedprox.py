@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ama import fedavg_aggregate
-from repro.core.strategies.base import ServerStrategy, register
+from repro.core.strategies.base import (ServerStrategy,
+                                        reduced_mix_update, register)
 
 
 @register
@@ -53,3 +54,10 @@ class FedProxStrategy(ServerStrategy):
             prev_global, client_params, sched["data_sizes"], keep,
             mix_coefs(self.fl, t, adaptive=False), impl=self.server_impl)
         return new_global, aux_state
+
+    def reduced_server_update(self, t, prev_global, client_params, sched,
+                              aux_state):
+        del t
+        keep = jnp.logical_not(sched["delayed"]).astype(jnp.float32)
+        return reduced_mix_update(prev_global, client_params, sched, keep,
+                                  jnp.float32(0.0)), aux_state

@@ -30,6 +30,19 @@ import threading
 import numpy as np
 
 
+def sample_shard_steps(indices: np.ndarray, rng: np.random.RandomState,
+                       steps: int, batch_size: int) -> np.ndarray:
+    """(steps, batch) global indices from one shard, reshuffled-epoch
+    order — THE sampling algorithm, shared by the dense ``ClientDataset``
+    list and the K-free ``VirtualClientShards`` so both draw
+    bit-identical streams from identical shard index arrays."""
+    n = len(indices)
+    need = steps * batch_size
+    reps = int(np.ceil(need / max(n, 1)))
+    idx = np.concatenate([rng.permutation(indices) for _ in range(reps)])
+    return idx[:need].reshape(steps, batch_size)
+
+
 class ClientDataset:
     """One client's local shard with epoch-style batch sampling."""
 
@@ -43,12 +56,7 @@ class ClientDataset:
     def sample_step_indices(self, rng: np.random.RandomState, steps: int,
                             batch_size: int) -> np.ndarray:
         """(steps, batch) GLOBAL sample indices, reshuffled-epoch order."""
-        n = len(self.indices)
-        need = steps * batch_size
-        reps = int(np.ceil(need / max(n, 1)))
-        idx = np.concatenate([rng.permutation(self.indices)
-                              for _ in range(reps)])
-        return idx[:need].reshape(steps, batch_size)
+        return sample_shard_steps(self.indices, rng, steps, batch_size)
 
     def sample_steps(self, rng: np.random.RandomState, steps: int,
                      batch_size: int):
@@ -59,6 +67,59 @@ class ClientDataset:
 
 def build_clients(data: dict, partition: list[np.ndarray]) -> list[ClientDataset]:
     return [ClientDataset(data, idx) for idx in partition]
+
+
+class VirtualClientShards:
+    """K clients over ONE base store with no per-client objects — the
+    staging half of a virtual population (``repro.env.virtual``).
+
+    A single base permutation (drawn once from the staging seed, off the
+    round axis) defines every shard arithmetically: client i owns
+    ``order[(i * shard_size + j) % n]`` for j < shard_size. Client i's
+    shard is therefore a pure function of (i, seed) — nothing is
+    materialised per client, so K = 10^6 costs the same as K = 20. Once
+    K * shard_size exceeds the base store the shards overlap by wrapping
+    around the permutation (distinct clients still hold distinct,
+    deterministic index sets — the standard trick for simulating
+    populations far larger than the benchmark corpus).
+
+    Duck-type contract with ``list[ClientDataset]`` where the engine and
+    stager need it: ``len``, ``.data``, and per-client index sampling —
+    dispatch is on the ``shard_indices`` attribute.
+    """
+
+    def __init__(self, data: dict, num_clients: int,
+                 shard_size: int | None = None, seed: int = 0):
+        self.data = data
+        self.num_clients = int(num_clients)
+        self.n = len(next(iter(data.values())))
+        if shard_size is None:
+            shard_size = max(1, self.n // self.num_clients)
+        self.shard_size = int(shard_size)
+        assert 0 < self.shard_size <= self.n, (self.shard_size, self.n)
+        self.order = np.random.RandomState(
+            (seed + 0xA5F152) % 2**32).permutation(self.n)
+
+    def __len__(self):
+        return self.num_clients
+
+    @property
+    def min_size(self) -> int:
+        return self.shard_size
+
+    def shard_indices(self, i: int) -> np.ndarray:
+        start = (int(i) * self.shard_size) % self.n
+        return self.order[(start + np.arange(self.shard_size)) % self.n]
+
+    def sample_step_indices(self, i: int, rng: np.random.RandomState,
+                            steps: int, batch_size: int) -> np.ndarray:
+        return sample_shard_steps(self.shard_indices(i), rng, steps,
+                                  batch_size)
+
+    def client_sizes(self, selected: np.ndarray) -> np.ndarray:
+        """|D_i| aggregation weights — the ``data_sizes`` callable the
+        environment layer consumes (``env.resolve(fl, data_sizes=...)``)."""
+        return np.full(np.shape(selected), self.shard_size, np.float32)
 
 
 # --------------------------------------------------------------------------
@@ -73,17 +134,27 @@ def stage_rng(seed: int, t: int) -> np.random.RandomState:
         (seed * 1_000_003 + t + 0x51ED270) % 2**32)
 
 
-def stage_round_indices(clients: list[ClientDataset], selected: np.ndarray,
+def stage_round_indices(clients, selected: np.ndarray,
                         seed: int, t: int, steps: int,
                         batch_size: int) -> np.ndarray:
-    """(C, steps, batch) global indices for round t's selected clients."""
+    """(C, steps, batch) global indices for round t's selected clients.
+
+    ``clients`` is either the dense ``list[ClientDataset]`` or a
+    ``VirtualClientShards``; both consume the shared per-round stream in
+    selected order, so a dense list built from ``shards.shard_indices``
+    stages bit-identical batches. Cost is O(C x steps x batch) either
+    way — never O(K)."""
     rng = stage_rng(seed, t)
+    if hasattr(clients, "shard_indices"):
+        return np.stack([clients.sample_step_indices(int(i), rng, steps,
+                                                     batch_size)
+                         for i in selected])
     return np.stack([clients[int(i)].sample_step_indices(rng, steps,
                                                          batch_size)
                      for i in selected])
 
 
-def stage_chunk(data: dict, clients: list[ClientDataset],
+def stage_chunk(data: dict, clients,
                 selected: np.ndarray, seed: int, t0: int, steps: int,
                 batch_size: int) -> dict:
     """Stage a whole chunk of rounds with ONE gather per data field.

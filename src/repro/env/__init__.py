@@ -12,16 +12,22 @@ Use ``resolve(fl)`` to get the environment for a config (``fl.env``),
 from repro.env import scenarios
 from repro.env.base import (ChannelModel, DeviceProfile, Environment,
                             FixedTierProfile, Participation, RoundSchedule,
-                            UniformParticipation, get, names, register,
-                            resolve, round_rng, side_rng)
+                            UniformParticipation, VirtualTierProfile, get,
+                            names, register, resolve, round_rng, side_rng)
 from repro.env.bandwidth import BandwidthEnvironment
 from repro.env.bernoulli import BernoulliEnvironment
 from repro.env.gilbert_elliott import GilbertElliottEnvironment
 from repro.env.trace import (TraceEnvironment, save_trace,
                              synth_mobility_trace)
+from repro.env.virtual import (DENSE_SELECT_MAX, VIRTUAL_K_MIN,
+                               VirtualPopulation, floyd_sample, hash_u01,
+                               is_virtual, select_batch_hashed)
 
 __all__ = ["Environment", "ChannelModel", "DeviceProfile", "Participation",
            "RoundSchedule", "FixedTierProfile", "UniformParticipation",
+           "VirtualTierProfile", "VirtualPopulation", "is_virtual",
+           "floyd_sample", "select_batch_hashed", "hash_u01",
+           "DENSE_SELECT_MAX", "VIRTUAL_K_MIN",
            "register", "resolve", "get", "names", "round_rng", "side_rng",
            "scenarios", "BernoulliEnvironment", "GilbertElliottEnvironment",
            "BandwidthEnvironment", "TraceEnvironment", "save_trace",

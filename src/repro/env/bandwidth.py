@@ -18,6 +18,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.env.base import ChannelModel, Environment, register
+from repro.env.virtual import TAG_DELAY, TAG_DELAY_LEN, hash_u01
 
 
 class BandwidthChannel(ChannelModel):
@@ -27,12 +28,31 @@ class BandwidthChannel(ChannelModel):
         if fl.max_delay <= 0:
             return self._no_delays(m)
         rate = fl.bw_mean_mbps * np.exp(fl.bw_sigma * rng.randn(m))
+        return self._delays_from_rate(rate)
+
+    def _delays_from_rate(self, rate):
+        fl = self.fl
         latency = fl.bw_upload_mbits / np.maximum(rate, 1e-9)
         deadlines = np.ceil(latency / fl.bw_deadline_s).astype(np.int64)
         delayed = deadlines > 1
         delays = np.clip(deadlines - 1, 1, fl.max_delay).astype(np.int32)
         delays = np.where(delayed, delays, 1).astype(np.int32)
         return delayed, delays
+
+    def draw_batch(self, t0, selected):
+        """Virtual path: shadow-fading normals for the whole block via
+        Box-Muller over two hashed uniforms keyed on (t, client)."""
+        fl = self.fl
+        n, m = selected.shape
+        if fl.max_delay <= 0:
+            return np.zeros((n, m), bool), np.ones((n, m), np.int32)
+        t = np.arange(t0, t0 + n, dtype=np.int64)[:, None]
+        u1 = hash_u01(fl.seed, TAG_DELAY, t, selected)
+        u2 = hash_u01(fl.seed, TAG_DELAY_LEN, t, selected)
+        z = np.sqrt(-2.0 * np.log(np.maximum(u1, 1e-12))) \
+            * np.cos(2.0 * np.pi * u2)
+        return self._delays_from_rate(fl.bw_mean_mbps
+                                      * np.exp(fl.bw_sigma * z))
 
 
 @register

@@ -40,6 +40,8 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.configs.base import FLConfig
+from repro.env.virtual import (DENSE_SELECT_MAX, TAG_LIMITED, floyd_sample,
+                               hash_u01, is_virtual, select_batch_hashed)
 
 
 @dataclass
@@ -82,21 +84,33 @@ class Participation:
 
 
 class UniformParticipation(Participation):
-    """m of K uniformly without replacement (paper §V)."""
+    """m of K uniformly without replacement (paper §V).
+
+    ``rng.choice(K, m, replace=False)`` materialises an O(K) permutation
+    per round; beyond ``DENSE_SELECT_MAX`` clients an O(m) Floyd draw
+    from the SAME per-round stream takes over. The guard keeps the draw
+    sequence (and the bernoulli env's bit-identity net) untouched at
+    paper scale."""
 
     def select(self, t, rng):
-        return rng.choice(self.fl.num_clients, size=self.fl.clients_per_round,
-                          replace=False).astype(np.int32)
+        K, m = self.fl.num_clients, self.fl.clients_per_round
+        if K <= DENSE_SELECT_MAX:
+            return rng.choice(K, size=m, replace=False).astype(np.int32)
+        return floyd_sample(rng, K, m)
 
 
 class DeviceProfile:
     """Per-client static device facts: compute tier, FES limited-ness,
     local-step budget, dataset size (aggregation weight)."""
 
-    def __init__(self, fl: FLConfig, data_sizes: np.ndarray | None = None):
+    def __init__(self, fl: FLConfig, data_sizes=None):
         self.fl = fl
         self.has_sizes = data_sizes is not None
-        self._sizes = (None if data_sizes is None
+        # data_sizes may be a dense (K,) array OR a callable mapping a
+        # client-id array to sizes (virtual populations never hold K
+        # floats; VirtualClientShards.client_sizes is the usual source)
+        self._sizes_fn = data_sizes if callable(data_sizes) else None
+        self._sizes = (None if data_sizes is None or callable(data_sizes)
                        else np.asarray(data_sizes, np.float32))
 
     def limited(self, selected: np.ndarray) -> np.ndarray:
@@ -115,8 +129,10 @@ class DeviceProfile:
         return np.where(self.limited(selected), part, full)
 
     def sizes(self, selected: np.ndarray) -> np.ndarray:
+        if self._sizes_fn is not None:
+            return np.asarray(self._sizes_fn(selected), np.float32)
         if self._sizes is None:
-            return np.ones(len(selected), np.float32)
+            return np.ones(np.shape(selected), np.float32)
         return self._sizes[selected].astype(np.float32)
 
 
@@ -133,6 +149,26 @@ class FixedTierProfile(DeviceProfile):
 
     def limited(self, selected):
         return np.array([i in self.limited_set for i in selected])
+
+
+class VirtualTierProfile(DeviceProfile):
+    """K-free tier profile: limited-ness is a per-client hashed
+    Bernoulli(p_limited) coin, evaluated only for selected clients.
+    Population-level limited count is Binomial(K, p) rather than the
+    dense profile's exact round(p*K) — equal in expectation, and the
+    dense profile stays in force below ``VIRTUAL_K_MIN``. All methods
+    are shape-generic so a whole (n_rounds, m) block evaluates at once.
+    """
+
+    def limited(self, selected):
+        return hash_u01(self.fl.seed, TAG_LIMITED,
+                        np.asarray(selected)) < self.fl.p_limited
+
+    def step_budget(self, n_steps, selected):
+        full = np.full(np.shape(selected), n_steps, np.int32)
+        part = np.maximum(1, (n_steps * self.fl.fedprox_partial)).astype(
+            np.int32)
+        return np.where(self.limited(selected), part, full)
 
 
 class ChannelModel:
@@ -152,6 +188,21 @@ class ChannelModel:
     def _no_delays(self, m: int) -> tuple[np.ndarray, np.ndarray]:
         return np.zeros(m, bool), np.ones(m, np.int32)
 
+    def draw_batch(self, t0: int, selected: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Virtual-path draw for a stacked (n_rounds, m) cohort block.
+
+        Default: one ``draw`` per row against a FRESH per-round stream —
+        hashed selection consumes no RNG, so the stream starts at
+        position 0 (a different stream universe from the dense path,
+        which is the point of the ``is_virtual`` guard); still pure in t
+        per row. Channels with vectorised hashed draws override this to
+        evaluate the whole block at once."""
+        rows = [self.draw(t0 + i, selected[i], round_rng(self.fl, t0 + i))
+                for i in range(len(selected))]
+        return (np.stack([r[0] for r in rows]),
+                np.stack([r[1] for r in rows]))
+
 
 # ---------------------------------------------------------------------------
 # the environment = participation x devices x channel
@@ -164,11 +215,16 @@ class Environment:
     #: registry key; aliases are extra names resolving to the same class
     name: str = ""
     aliases: tuple[str, ...] = ()
+    #: environments that inherently materialise the population (trace
+    #: replay) opt out of the virtual path and stay dense at any K
+    supports_virtual: bool = True
 
-    def __init__(self, fl: FLConfig, data_sizes: np.ndarray | None = None):
+    def __init__(self, fl: FLConfig, data_sizes=None):
         self.fl = fl
+        self.virtual = is_virtual(fl) and self.supports_virtual
         self.participation = self._make_participation(fl)
-        self.devices = self._make_devices(fl, data_sizes)
+        self.devices = (VirtualTierProfile(fl, data_sizes) if self.virtual
+                        else self._make_devices(fl, data_sizes))
         self.channel = self._make_channel(fl)
 
     # component factories ------------------------------------------------
@@ -184,6 +240,11 @@ class Environment:
     # the schedule contract ----------------------------------------------
     def round(self, t: int) -> RoundSchedule:
         """Round t's schedule — a pure function of (config, t)."""
+        if self.virtual:
+            b = self._vbatch(t, 1)
+            return RoundSchedule(b["selected"][0], b["limited"][0],
+                                 b["delayed"][0], b["delays"][0],
+                                 b["data_sizes"][0])
         rng = round_rng(self.fl, t)
         sel = self.participation.select(t, rng)
         limited = self.devices.limited(sel)
@@ -194,14 +255,40 @@ class Environment:
     def batch(self, t0: int, n_rounds: int) -> dict[str, np.ndarray]:
         """Stacked (n_rounds, m) schedule arrays for the fused scan
         engine. Row i is BIT-IDENTICAL to ``round(t0 + i)`` — see the
-        module docstring; the vectorisation is the output layout, not
-        the draws."""
-        rows = [self.round(t0 + i) for i in range(n_rounds)]
-        return {"selected": np.stack([r.selected for r in rows]),
-                "limited": np.stack([r.limited for r in rows]),
-                "delayed": np.stack([r.delayed for r in rows]),
-                "delays": np.stack([r.delays for r in rows]),
-                "data_sizes": np.stack([r.data_sizes for r in rows])}
+        module docstring. Virtual populations evaluate the whole block
+        in vectorised hashed draws (O(n*m), no per-round Python work);
+        the dense path keeps the sequential per-round RandomState draws
+        that define bit-identity at paper scale."""
+        if self.virtual:
+            return self._vbatch(t0, n_rounds)
+        m = self.fl.clients_per_round
+        out = {"selected": np.empty((n_rounds, m), np.int32),
+               "limited": np.empty((n_rounds, m), bool),
+               "delayed": np.empty((n_rounds, m), bool),
+               "delays": np.empty((n_rounds, m), np.int32),
+               "data_sizes": np.empty((n_rounds, m), np.float32)}
+        for i in range(n_rounds):
+            r = self.round(t0 + i)
+            out["selected"][i] = r.selected
+            out["limited"][i] = r.limited
+            out["delayed"][i] = r.delayed
+            out["delays"][i] = r.delays
+            out["data_sizes"][i] = r.data_sizes
+        return out
+
+    def _vbatch(self, t0: int, n_rounds: int) -> dict[str, np.ndarray]:
+        """The virtual-population block: selection, tier and channel are
+        pure hashed functions of (client_id, seed, t), evaluated for the
+        whole (n_rounds, m) block elementwise — nothing here scales with
+        K. Both ``round`` and ``batch`` route through this when virtual,
+        so the batch-row contract holds by construction."""
+        sel = select_batch_hashed(self.fl, t0, n_rounds)
+        delayed, delays = self.channel.draw_batch(t0, sel)
+        return {"selected": sel,
+                "limited": self.devices.limited(sel),
+                "delayed": delayed,
+                "delays": delays.astype(np.int32),
+                "data_sizes": self.devices.sizes(sel)}
 
 
 # ---------------------------------------------------------------------------

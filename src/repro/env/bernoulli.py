@@ -11,6 +11,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.env.base import ChannelModel, Environment, register
+from repro.env.virtual import TAG_DELAY, TAG_DELAY_LEN, hash_u01
 
 
 class BernoulliChannel(ChannelModel):
@@ -26,6 +27,21 @@ class BernoulliChannel(ChannelModel):
         else:
             delayed = np.zeros(m, bool)
             delays = np.ones(m, np.int32)
+        delays = np.where(delayed, delays, 1).astype(np.int32)
+        return delayed, delays
+
+    def draw_batch(self, t0, selected):
+        """Virtual path: the whole (n_rounds, m) block in two hashed
+        draws keyed on (t, client) — i.i.d. across both, like the dense
+        channel, with no per-round Python work."""
+        fl = self.fl
+        n, m = selected.shape
+        if fl.max_delay <= 0 or fl.p_delay <= 0:
+            return np.zeros((n, m), bool), np.ones((n, m), np.int32)
+        t = np.arange(t0, t0 + n, dtype=np.int64)[:, None]
+        delayed = hash_u01(fl.seed, TAG_DELAY, t, selected) < fl.p_delay
+        delays = 1 + (hash_u01(fl.seed, TAG_DELAY_LEN, t, selected)
+                      * fl.max_delay).astype(np.int64)  # U{1..max_delay}
         delays = np.where(delayed, delays, 1).astype(np.int32)
         return delayed, delays
 

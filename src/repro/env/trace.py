@@ -76,6 +76,9 @@ def synth_mobility_trace(fl: FLConfig,
 class TraceEnvironment(Environment):
     name = "trace"
     aliases = ("mobility",)
+    # a trace IS a materialised population — (T, m) arrays on disk and
+    # an O(K) synthesis loop — so it stays dense at any K
+    supports_virtual = False
 
     def __init__(self, fl: FLConfig, data_sizes=None):
         super().__init__(fl, data_sizes)

@@ -169,12 +169,20 @@ class SimulationEngine:
                  donate: bool = True):
         self.model = model
         self.fl = fl
+        # clients: a dense list[ClientDataset] OR a VirtualClientShards
+        # (K-free streamed staging — client shards are arithmetic views
+        # of one base store, nothing materialised per client)
         self.clients = clients
+        self._streamed = hasattr(clients, "shard_indices")
         self.test_data = test_data
         # any registered environment (fl.env); data sizes feed the
-        # |D_i| aggregation weights through the schedule contract
+        # |D_i| aggregation weights through the schedule contract —
+        # as a dense (K,) vector for a client list, as a callable for
+        # virtual shards (a (K,) vector is what we are avoiding)
         self.env = environment or env_mod.resolve(
-            fl, data_sizes=np.array([len(c) for c in clients], np.float32))
+            fl, data_sizes=(clients.client_sizes if self._streamed else
+                            np.array([len(c) for c in clients],
+                                     np.float32)))
         self.strategy = strategies.resolve(fl)
         # donate=True updates the carry in place on accelerator backends,
         # which also invalidates params references held from BEFORE a
@@ -186,8 +194,9 @@ class SimulationEngine:
         self._evaluator = (None if eval_fn is not None
                            else Evaluator(model, test_data, eval_batch))
         self.prefetch = prefetch
-        self.data = clients[0].data      # shared sample store (one gather)
-        if any(c.data is not self.data for c in clients):
+        self.data = clients.data if self._streamed else clients[0].data
+        if not self._streamed and any(c.data is not self.data
+                                      for c in clients):
             raise ValueError(
                 "the chunked data plane stages every client from ONE "
                 "shared sample store (build clients with "
@@ -221,7 +230,8 @@ class SimulationEngine:
 
     # ------------------------------------------------------------------
     def _steps_per_round(self) -> int:
-        n_min = min(len(c) for c in self.clients)
+        n_min = (self.clients.min_size if self._streamed
+                 else min(len(c) for c in self.clients))
         per_epoch = max(1, n_min // self.fl.local_batch_size)
         return self.fl.local_epochs * per_epoch
 
@@ -259,7 +269,9 @@ class SimulationEngine:
             n = min((t // eval_every + 1) * eval_every, end) - t
             chunks.append((t, n))
             t += n
-        staged = (ChunkPrefetcher(lambda c: self._stage(*c), chunks)
+        staged = (ChunkPrefetcher(lambda c: self._stage(*c), chunks,
+                                  depth=getattr(self.fl, "prefetch_depth",
+                                                1))
                   if self.prefetch else (self._stage(*c) for c in chunks))
         try:
             for (t, n), (sb, batch) in zip(chunks, staged):

@@ -52,7 +52,8 @@ from repro.core import strategies
 from repro.core.round import init_state
 from repro.core.simulation import FederatedSimulation
 from repro.data.partition import shard_partition
-from repro.data.pipeline import build_clients
+from repro.data.pipeline import VirtualClientShards, build_clients
+from repro.env.virtual import is_virtual
 from repro.data.synth import make_image_classification, make_lm_tokens
 from repro.exec import ChunkRunner
 from repro.launch.mesh import engine_mesh
@@ -63,8 +64,18 @@ def paper_scale(args, fl: FLConfig):
     model = build_model(get_arch(args.arch))
     train, test = make_image_classification(
         n_train=args.n_train, n_test=400, seed=fl.seed)
-    clients = build_clients(
-        train, shard_partition(train["label"], fl.num_clients, seed=fl.seed))
+    if is_virtual(fl):
+        # virtual population: clients are arithmetic shard views of the
+        # base store — nothing materialised per client, any K
+        clients = VirtualClientShards(
+            train, fl.num_clients,
+            shard_size=max(fl.local_batch_size,
+                           args.n_train // min(fl.num_clients, 64)),
+            seed=fl.seed)
+    else:
+        clients = build_clients(
+            train,
+            shard_partition(train["label"], fl.num_clients, seed=fl.seed))
     sim = FederatedSimulation(model, fl, clients, test,
                               use_scan=not args.no_scan,
                               mesh=engine_mesh(fl.clients_per_round))
@@ -191,11 +202,29 @@ def main():
                          "grouped by FES limited-ness — limited cohorts "
                          "never trace the body backward (real Eq. 3 "
                          "computation reduction)")
+    ap.add_argument("--population", default="auto",
+                    choices=("auto", "dense", "virtual"),
+                    help="population realisation: 'auto' keeps the dense "
+                         "bit-identical path up to 65536 clients and the "
+                         "K-free hashed VirtualPopulation above; "
+                         "'dense'/'virtual' force either at any K")
+    ap.add_argument("--prefetch-depth", type=int, default=1,
+                    help="staged chunks buffered ahead of the device "
+                         "(host memory ~ depth x chunk bytes)")
+    ap.add_argument("--client-reduce", default="auto",
+                    choices=("auto", "off", "force"),
+                    help="pre-reduce the stacked client axis before the "
+                         "server plane ('auto': when the mesh's client "
+                         "axis is sharded; collective moves N, not CxN, "
+                         "bytes)")
     ap.add_argument("--p-limited", type=float, default=0.25)
     ap.add_argument("--p-delay", type=float, default=0.0)
     ap.add_argument("--max-delay", type=int, default=0)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--clients-per-round", type=int, default=0,
+                    help="cohort size m (0 = clients/4, the paper ratio; "
+                         "set explicitly for large virtual populations)")
     ap.add_argument("--cohorts", type=int, default=2)
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--batch", type=int, default=2, help="pod: per-step batch")
@@ -210,7 +239,8 @@ def main():
     args = ap.parse_args()
 
     fl = FLConfig(num_clients=args.clients,
-                  clients_per_round=max(2, args.clients // 4),
+                  clients_per_round=(args.clients_per_round
+                                     or max(2, args.clients // 4)),
                   local_epochs=2, local_batch_size=25, lr=args.lr,
                   algorithm=args.algorithm, env=args.env,
                   p_limited=args.p_limited,
@@ -219,6 +249,9 @@ def main():
                   use_kernel=args.use_kernel,
                   server_plane=args.server_plane,
                   client_plane=args.client_plane,
+                  population=args.population,
+                  prefetch_depth=args.prefetch_depth,
+                  client_reduce=args.client_reduce,
                   cohorts=args.cohorts, local_steps=args.local_steps,
                   seed=args.seed)
     if args.scenario:

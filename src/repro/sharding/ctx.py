@@ -7,6 +7,7 @@ tests, reduced configs)."""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
@@ -47,6 +48,39 @@ def constrain(x, *axes):
     if not any(fixed):
         return x
     return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+def axis_size(name: str) -> int:
+    """Size of a mesh axis in the ACTIVE mesh context (1 when no mesh is
+    active or the axis doesn't exist) — how the round engine decides at
+    trace time whether the client axis is actually distributed."""
+    mesh = _active_mesh()
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return int(mesh.shape[name])
+
+
+def reduce_leading(tree, weights):
+    """Weighted sum over every leaf's LEADING (client) axis, f32.
+
+    weights (C,) -> leaf (C, ...) contracts to (...); weights (C, R) ->
+    (R, ...) (R simultaneous reductions — e.g. the async plane's on-time
+    aggregate + Q ring-buffer enqueue slots in one contraction). The
+    input is constrained onto the mesh's "client" axis first, so on a
+    sharded mesh XLA lowers this as a LOCAL partial sum followed by one
+    N-byte (or R x N) all-reduce — the per-round collective moves the
+    model size, not cohorts x model size.
+    """
+    w = weights.astype(jnp.float32)
+    eq = "c...,cr->r..." if w.ndim == 2 else "c...,c->..."
+
+    def red(x):
+        if not getattr(x, "ndim", 0):
+            return x
+        xc = constrain(x, "client", *([None] * (x.ndim - 1)))
+        return jnp.einsum(eq, xc.astype(jnp.float32), w)
+
+    return jax.tree.map(red, tree)
 
 
 def constrain_leading(tree, axis: str):
