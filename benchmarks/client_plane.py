@@ -44,6 +44,7 @@ from repro.core.round import init_state, make_round_step
 from repro.data.pipeline import partition_plan
 from repro.data.synth import make_lm_tokens
 from repro.models.api import build_model
+from repro.obs.provenance import provenance
 
 OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
                    "BENCH_client_plane.json")
@@ -161,7 +162,8 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
         # wall-clock jitter on shared runners; the gate catches real
         # plane regressions, not noise)
         rec = {"rows": rows, "speedup": speedup,
-               "gate": round(speedup * 0.8, 3), "flops_paper": flops}
+               "gate": round(speedup * 0.8, 3), "flops_paper": flops,
+               "provenance": provenance()}
         print(f"client_plane.smoke_speedup,{speedup},")
         print(f"client_plane.limited_over_full_flops,"
               f"{flops['limited_over_full']},<1 required")
@@ -183,6 +185,7 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
                      "speedup": headline["speedup"]},
         "smoke": {"rows": smoke_rows, "speedup": s_speedup,
                   "gate": round(s_speedup * 0.8, 3)},
+        "provenance": provenance(),
     }
     for s, f in flops.items():
         print(f"client_plane.{s}.limited_over_full_flops,"

@@ -26,6 +26,9 @@ import json
 import os
 import time
 
+from repro.obs.provenance import provenance
+from repro.obs.timing import sync_time
+
 from repro.configs.base import FLConfig
 from repro.configs.registry import ARCHS
 from repro.core.simulation import FederatedSimulation
@@ -60,17 +63,19 @@ def _cell(model, train, test, K: int, C: int, *, rounds: int,
     sim = FederatedSimulation(model, fl, clients, test)
     # host-side cost in isolation: schedule draw + chunk staging
     sim._stage(0, rounds)                               # warm (GE memo etc.)
-    t0 = time.time()
+    # host-side numpy: nothing to sync, but perf_counter is monotonic
+    t0 = time.perf_counter()
     for _ in range(max(reps, 2)):
         sim._stage(0, rounds)
-    sched_stage_ms = (time.time() - t0) / max(reps, 2) / rounds * 1e3
-    # end-to-end engine throughput (compile + warm first)
+    sched_stage_ms = ((time.perf_counter() - t0)
+                      / max(reps, 2) / rounds * 1e3)
+    # end-to-end engine throughput (compile + warm first); sync_time
+    # closes each span with block_until_ready (obs.timing)
     sim.run(rounds=rounds, eval_every=rounds)
     best = float("inf")
     for _ in range(reps):
-        t0 = time.time()
-        sim.run(rounds=rounds, eval_every=rounds)
-        best = min(best, time.time() - t0)
+        dt, _ = sync_time(sim.run, rounds=rounds, eval_every=rounds)
+        best = min(best, dt)
     return {"population": "virtual" if sim.env.virtual else "dense",
             "rounds_per_sec": round(rounds / best, 3),
             "per_round_ms": round(best / rounds * 1e3, 2),
@@ -98,6 +103,7 @@ def _smoke_rec(*, rounds, reps, n_train, cohort, populations) -> dict:
 def run(quick: bool = True, smoke: bool = False) -> dict:
     if smoke:
         rec = _smoke_rec(**SMOKE)
+        rec["provenance"] = provenance()
         lo, hi = (str(K) for K in SMOKE["populations"])
         print(f"federation_scale.rps_k1e3,"
               f"{rec['cells'][lo]['rounds_per_sec']},")
@@ -132,7 +138,8 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
            "algorithm": "ama_fes", "env": "bernoulli",
            "shard_size": SHARD_SIZE, "rounds": rounds,
            "populations": list(POPULATIONS), "cohorts": list(COHORTS),
-           "grid": grid, "sublinearity": sub}
+           "grid": grid, "sublinearity": sub,
+           "provenance": provenance()}
     # CI regression-gate baseline: the exact configuration the smoke
     # gate re-runs (scripts/check_bench.py), variance-discounted
     s = _smoke_rec(**SMOKE)

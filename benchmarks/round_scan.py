@@ -9,11 +9,11 @@ dispatch every round; the scan pays neither.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.timing import sync_time
 
 from repro import env as env_mod
 from repro.configs.base import FLConfig, reduced
@@ -41,31 +41,28 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
     model, fl, batch, scheds = _setup(rounds)
 
     # --- baseline: one jitted call per round (seed architecture)
+    # timing via obs.timing.sync_time: perf_counter spans closed by
+    # block_until_ready on the outputs (async-dispatch-safe)
     step = jax.jit(make_round_step(model, fl))
     state = init_state(model, fl, jax.random.PRNGKey(0))
     sched0 = jax.tree.map(lambda x: x[0], scheds)
-    t0 = time.time()
-    state, m = step(state, batch, sched0)
-    jax.block_until_ready(m)
-    loop_compile_s = time.time() - t0
-    t0 = time.time()
-    for r in range(1, rounds):
-        state, m = step(state, batch,
-                        jax.tree.map(lambda x, r=r: x[r], scheds))
-    jax.block_until_ready(m)
-    loop_per_round_ms = (time.time() - t0) / max(rounds - 1, 1) * 1e3
+    loop_compile_s, (state, m) = sync_time(step, state, batch, sched0)
+
+    def _loop_rounds(state):
+        for r in range(1, rounds):
+            state, m = step(state, batch,
+                            jax.tree.map(lambda x, r=r: x[r], scheds))
+        return state, m
+
+    loop_s, _ = sync_time(_loop_rounds, state)
+    loop_per_round_ms = loop_s / max(rounds - 1, 1) * 1e3
 
     # --- fused scan: the whole run is one XLA program
     loop_fn = make_train_loop(model, fl, donate=False)
     state0 = init_state(model, fl, jax.random.PRNGKey(0))
-    t0 = time.time()
-    _, m = loop_fn(state0, batch, scheds)
-    jax.block_until_ready(m)
-    scan_first_s = time.time() - t0          # compile + rounds
-    t0 = time.time()
-    _, m = loop_fn(state0, batch, scheds)
-    jax.block_until_ready(m)
-    scan_per_round_ms = (time.time() - t0) / rounds * 1e3
+    scan_first_s, _ = sync_time(loop_fn, state0, batch, scheds)
+    scan_s, _ = sync_time(loop_fn, state0, batch, scheds)
+    scan_per_round_ms = scan_s / rounds * 1e3
     scan_compile_s = scan_first_s - scan_per_round_ms * rounds / 1e3
 
     rec = {"rounds": rounds,

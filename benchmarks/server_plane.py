@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.core import strategies
+from repro.obs.provenance import provenance
 
 OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
                    "BENCH_server_plane.json")
@@ -194,7 +195,7 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
         # on these wall-clock ratios is ~±20%, so the gate catches real
         # fusion regressions (2-10x drops) without flaking on jitter
         rec = {"rows": rows, "geomean_speedup": round(g, 3),
-               "gate": round(g * 0.8, 3)}
+               "gate": round(g * 0.8, 3), "provenance": provenance()}
         print(f"server_plane.smoke_geomean,{rec['geomean_speedup']},")
         return rec
 
@@ -214,6 +215,7 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
         "interpret_parity_maxerr": err,
         "smoke": {"rows": smoke_rows, "geomean_speedup": round(sg, 3),
                   "gate": round(sg * 0.8, 3)},
+        "provenance": provenance(),
     }
     print(f"server_plane.largest_min_speedup,"
           f"{rec['largest']['min_speedup']},x at K={largest[0]['K']} "

@@ -4,15 +4,23 @@ Runs the full §V simulation path (real chunk staging, schedules from the
 environment registry, jitted batched eval at the ``eval_every`` cadence)
 through both configurations of the unified execution engine — the fused
 chunked ``lax.scan`` and the bit-identical per-round-jit fallback — and
-reports steady-state rounds/sec. Emits a machine-readable
-``BENCH_sim_engine.json`` at the repo root so the perf trajectory of the
-simulation path is tracked from PR 3 onward.
+reports steady-state rounds/sec. Also measures the telemetry-plane tax:
+a third pass with ``fl.extended_metrics`` on and a ``MetricsLogger``
+sink (the ``--metrics-out`` configuration) reports
+``metrics_overhead`` = metrics-on over metrics-off scan throughput
+(the <5% budget the observability acceptance gates on). Emits a
+machine-readable ``BENCH_sim_engine.json`` at the repo root so the perf
+trajectory of the simulation path is tracked from PR 3 onward.
 """
 from __future__ import annotations
 
 import json
 import os
-import time
+import tempfile
+
+from repro.obs.log import MetricsLogger
+from repro.obs.provenance import provenance
+from repro.obs.timing import sync_time
 
 from repro.configs.base import FLConfig
 from repro.configs.registry import ARCHS
@@ -35,9 +43,9 @@ def _world(n_train: int, n_clients: int, seed: int = 0):
 
 
 def _timed_pass(sim, rounds: int, eval_every: int) -> tuple[float, float]:
-    t0 = time.time()
-    hist = sim.run(rounds=rounds, eval_every=eval_every)
-    return time.time() - t0, hist.train_loss[-1]
+    # obs.timing.sync_time: perf_counter + block_until_ready
+    dt, hist = sync_time(sim.run, rounds=rounds, eval_every=eval_every)
+    return dt, hist.train_loss[-1]
 
 
 def _measure(model, fl, clients, test, *, rounds: int, eval_every: int,
@@ -68,6 +76,35 @@ def _measure(model, fl, clients, test, *, rounds: int, eval_every: int,
     return out["chunked_scan"], out["per_round_loop"]
 
 
+def _metrics_tax(model, fl, clients, test, *, rounds: int,
+                 eval_every: int, reps: int, scan_best: float) -> dict:
+    """The telemetry-plane overhead: the SAME chunked-scan pass with
+    ``fl.extended_metrics`` on and every row + eval + phase summary
+    streamed through a MetricsLogger to a real JSONL file — the
+    ``--metrics-out`` configuration end-to-end."""
+    with tempfile.NamedTemporaryFile(suffix=".jsonl", delete=False) as f:
+        path = f.name
+    try:
+        logger = MetricsLogger(path)
+        sim = FederatedSimulation(model, fl.with_(extended_metrics=True),
+                                  clients, test, use_scan=True,
+                                  logger=logger)
+        sim.run(rounds=eval_every, eval_every=eval_every)   # compile
+        best = float("inf")
+        for _ in range(reps):
+            dt, _ = _timed_pass(sim, rounds, eval_every)
+            best = min(best, dt)
+        logger.close()
+    finally:
+        os.unlink(path)
+    rps = rounds / best
+    return {"rounds": rounds, "seconds": round(best, 3),
+            "rounds_per_sec": round(rps, 3),
+            # metrics-on throughput over metrics-off (1.0 = free;
+            # the observability acceptance budget is >= 0.95)
+            "throughput_ratio": round(scan_best / best, 3)}
+
+
 SMOKE = dict(rounds=4, eval_every=2, reps=2, n_train=400, n_clients=10)
 
 
@@ -81,40 +118,53 @@ def _bench(*, rounds, eval_every, reps, n_train, n_clients):
                           eval_every=eval_every, reps=reps)
     speedup = round(scan["rounds_per_sec"]
                     / max(loop["rounds_per_sec"], 1e-9), 3)
-    return fl, scan, loop, speedup
+    metrics_on = _metrics_tax(model, fl, clients, test, rounds=rounds,
+                              eval_every=eval_every, reps=reps,
+                              scan_best=scan["seconds"])
+    return fl, scan, loop, speedup, metrics_on
 
 
 def run(quick: bool = True, smoke: bool = False) -> dict:
     if smoke:
-        fl, scan, loop, speedup = _bench(**SMOKE)
+        fl, scan, loop, speedup, metrics_on = _bench(**SMOKE)
         rec = {"chunked_scan": scan, "per_round_loop": loop,
-               "speedup": speedup, "gate": round(speedup * 0.8, 3)}
+               "speedup": speedup, "gate": round(speedup * 0.8, 3),
+               "metrics_on": metrics_on,
+               "provenance": provenance()}
         print(f"sim_engine.loop_rounds_per_sec,"
               f"{loop['rounds_per_sec']},")
         print(f"sim_engine.scan_rounds_per_sec,"
               f"{scan['rounds_per_sec']},")
         print(f"sim_engine.speedup,{speedup},x chunked scan over "
               f"per-round loop (smoke)")
+        print(f"sim_engine.metrics_throughput_ratio,"
+              f"{metrics_on['throughput_ratio']},metrics-on over "
+              f"metrics-off scan (smoke)")
         return rec
 
     rounds, eval_every = (8 if quick else 24), 4
-    fl, scan, loop, speedup = _bench(rounds=rounds, eval_every=eval_every,
-                                     reps=3, n_train=1500, n_clients=20)
+    fl, scan, loop, speedup, metrics_on = _bench(
+        rounds=rounds, eval_every=eval_every, reps=3, n_train=1500,
+        n_clients=20)
     rec = {"bench": "sim_engine", "scale": "paper",
            "arch": "paper-cnn", "algorithm": fl.algorithm,
            "n_train": 1500, "n_clients": 20,
            "clients_per_round": fl.clients_per_round,
            "eval_every": eval_every,
            "chunked_scan": scan, "per_round_loop": loop,
-           "speedup": speedup}
+           "speedup": speedup, "metrics_on": metrics_on,
+           "provenance": provenance()}
     print(f"sim_engine.loop_rounds_per_sec,{loop['rounds_per_sec']},")
     print(f"sim_engine.scan_rounds_per_sec,{scan['rounds_per_sec']},")
     print(f"sim_engine.speedup,{rec['speedup']},x chunked scan over "
           f"per-round loop ({rounds} rounds, eval_every={eval_every})")
+    print(f"sim_engine.metrics_throughput_ratio,"
+          f"{metrics_on['throughput_ratio']},metrics-on over "
+          f"metrics-off scan (--metrics-out tax; budget >= 0.95)")
     # CI regression-gate baseline: the exact configuration the smoke
     # gate re-runs (scripts/check_bench.py), variance-discounted so the
     # gate trips on engine regressions, not shared-runner jitter
-    _, s_scan, s_loop, s_speedup = _bench(**SMOKE)
+    _, s_scan, s_loop, s_speedup, _ = _bench(**SMOKE)
     rec["smoke"] = {"speedup": s_speedup,
                     "gate": round(s_speedup * 0.8, 3)}
     print(f"sim_engine.smoke_speedup,{s_speedup},gate baseline "

@@ -9,7 +9,11 @@ shared-runner variance (~±20% on wall-clock ratios at these sizes), so
 the gate trips on real regressions (2-10x fusion losses), not jitter.
 
 Fresh smoke results are written as JSON next to the baselines (or into
-``--out-dir``) for upload as workflow artifacts.
+``--out-dir``) for upload as workflow artifacts. On a regression the
+report includes the provenance diff (jax version, backend, device
+count, git sha — ``repro.obs.provenance``) between the committed
+baseline and the fresh run, so "what regressed" distinguishes an engine
+change from an environment change at a glance.
 
 Usage:  PYTHONPATH=src python scripts/check_bench.py [--out-dir DIR]
 """
@@ -71,6 +75,21 @@ def main() -> int:
               f"(0.9 x committed gate) -> {verdict}")
         if fresh < floor:
             failures.append(name)
+            # environment-or-code triage: baselines committed before the
+            # provenance stamp existed just report "no baseline stamp"
+            from repro.obs.provenance import diff as prov_diff
+            pd = prov_diff(baseline.get("provenance"),
+                           rec.get("provenance"))
+            if baseline.get("provenance") is None:
+                print(f"{name}: baseline has no provenance stamp "
+                      f"(pre-telemetry BENCH json); fresh env: "
+                      f"{rec.get('provenance')}")
+            elif pd:
+                print(f"{name}: provenance diff baseline -> fresh: "
+                      + "; ".join(pd))
+            else:
+                print(f"{name}: provenance identical to baseline — "
+                      f"regression is in the code path, not the env")
 
     if failures:
         print(f"benchmark regression gate FAILED: {failures} — fused/scan "

@@ -1,0 +1,64 @@
+"""CI gate: validate a --metrics-out JSONL against the telemetry schema.
+
+Exit 0 when every row conforms (header with a supported schema version,
+known row kinds, required keys, monotone round indices, evals aligned
+to logged rounds); exit 1 with one line per violation otherwise. Run in
+CI right after the launcher smoke so a PR that silently breaks the
+metrics schema (or stops emitting a series the report CLI consumes)
+cannot land green.
+
+Usage:  PYTHONPATH=src python scripts/check_metrics.py run.jsonl [...]
+        ... check_metrics.py --require-extended run.jsonl   # round rows
+        must carry the extended series (staleness/mix/norm/wire)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.obs.log import read_rows, validate_rows
+from repro.obs.metrics import ROUND_METRIC_KEYS
+
+
+def check(path: str, require_extended: bool = False) -> list[str]:
+    try:
+        rows = read_rows(path)
+    except (OSError, ValueError) as e:
+        return [str(e)]
+    errs = validate_rows(rows)
+    rnd = [r for r in rows if r.get("kind") == "round"]
+    if require_extended:
+        if not rnd:
+            errs.append("no round rows")
+        for k in ROUND_METRIC_KEYS:
+            missing = sum(1 for r in rnd if k not in r)
+            if missing:
+                errs.append(f"extended series {k!r} missing from "
+                            f"{missing}/{len(rnd)} round rows")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+")
+    ap.add_argument("--require-extended", action="store_true",
+                    help="fail unless round rows carry the extended "
+                         "telemetry series")
+    args = ap.parse_args(argv)
+    failed = False
+    for path in args.paths:
+        errs = check(path, args.require_extended)
+        if errs:
+            failed = True
+            for e in errs:
+                print(f"{path}: {e}")
+        else:
+            rows = read_rows(path)
+            n_round = sum(r.get("kind") == "round" for r in rows)
+            n_eval = sum(r.get("kind") == "eval" for r in rows)
+            print(f"{path}: OK ({n_round} round rows, {n_eval} evals)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -186,6 +186,13 @@ class FLConfig:
                                    # only differentiation (the body backward is
                                    # never built — paper §III at pod scale)
     fes_enabled: bool = True
+    # telemetry plane (repro.obs): emit the extended per-round metric
+    # series (staleness histogram, participation counts, effective mix
+    # coefficient, delta/update norms, bytes-on-wire) as extra scan ys.
+    # Opt-in; enabling it never changes the params stream (bit-identity
+    # gated in tests/test_obs.py). The launcher switches it on with
+    # --metrics-out.
+    extended_metrics: bool = False
     seed: int = 0
     # pod-scale runs: #parallel client cohorts simulated in one jitted round
     cohorts: int = 4

@@ -101,7 +101,15 @@ def make_round_step(model, fl: FLConfig, strategy=None):
         raise ValueError(f"unknown client_plane {fl.client_plane!r}; "
                          "expected 'masked' or 'partitioned'")
 
-    def round_step(state, batch, sched):
+    # extended telemetry (fl.extended_metrics): the per-round series of
+    # repro.obs.metrics ride the scan ys — computed from values the round
+    # already materializes, so enabling them never changes the params
+    # stream (the engine's bit-identity nets gate this)
+    extended = bool(getattr(fl, "extended_metrics", False))
+    if extended:
+        from repro.obs.metrics import payload_bytes, round_metrics
+
+    def round_step(state, batch, sched, _tap=None):
         t = state["t"]
         prev_global = state["params"]
         # stacked client axis over the FL mesh ("client"); no-op off-mesh
@@ -134,6 +142,26 @@ def make_round_step(model, fl: FLConfig, strategy=None):
         on_time = jnp.logical_not(sched["delayed"])
         metrics = {"loss": jnp.mean(losses),
                    "n_on_time": jnp.sum(on_time.astype(jnp.int32))}
+        if extended:
+            # the metric taps must OBSERVE the params stream, not
+            # participate in it: any extra consumer of the LIVE scan
+            # carry (prev params / aux) lets XLA rewrite the update
+            # algebra it feeds and shifts the params by 1-2 ulp (and
+            # optimization_barrier does not survive this backend's
+            # pipeline). ``_tap`` is the shadow copy of the previous
+            # round's {params, aux} that make_train_loop threads through
+            # a dedicated carry slot — equal by construction, but a
+            # separate buffer with no consumers in the round math, so
+            # the metrics-off program is untouched. Absent a tap (bare
+            # per-round jit outside the engine) the live carry is used:
+            # a single-round program has no cross-round fusion to
+            # perturb.
+            tap = _tap if _tap is not None else {"params": prev_global,
+                                                 "aux": state["aux"]}
+            metrics.update(round_metrics(
+                fl, strategy, t, tap["params"], client_params,
+                new_params, sched, tap["aux"],
+                payload=payload_bytes(prev_global)))
         return {"params": new_params, "t": t + 1, "aux": aux}, metrics
 
     return round_step
@@ -154,8 +182,41 @@ def make_train_loop(model, fl: FLConfig, strategy=None, *,
     global model (and at LLM scale that is the whole HBM budget) is
     updated in place; pass False when the caller needs the input state
     afterwards.
+
+    With ``fl.extended_metrics`` the returned callable takes a fourth
+    argument: ``train_loop(state, batch, scheds, tap0)`` where ``tap0``
+    is a device COPY of the initial ``{"params", "aux"}`` (separate
+    buffers — do not pass the live state arrays, that defeats donation
+    and the CSE isolation; see the comment at the extended branch).
     """
     round_step = make_round_step(model, fl, strategy)
+    extended = bool(getattr(fl, "extended_metrics", False))
+
+    if extended:
+        # shadow-tap plumbing: the telemetry reads the previous round's
+        # {params, aux} through a dedicated carry slot seeded from the
+        # EXTRA ``tap0`` argument (a caller-side device copy of the
+        # initial state — ChunkRunner makes it). The tap must enter the
+        # program as its own parameter: seeding it from ``state`` inside
+        # the program makes it the same SSA value as the (donated) live
+        # carry, and at trip-count-1 XLA value-numbers the two slots
+        # back together, re-fusing the metric norms with the server mix
+        # and shifting the params by 1 ulp. A distinct parameter cannot
+        # be CSE'd away, so the live carry keeps exactly the consumer
+        # set of the metrics-off program — the bit-identity contract
+        # (see round_step).
+        def train_loop_ext(state, batch, scheds, tap0):
+            def body(carry, xs):
+                st, tap = carry
+                b, sc = xs if per_round_batch else (batch, xs)
+                new_st, m = round_step(st, b, sc, tap)
+                return (new_st, {"params": new_st["params"],
+                                 "aux": new_st["aux"]}), m
+            xs = (batch, scheds) if per_round_batch else scheds
+            (state, _), metrics = jax.lax.scan(body, (state, tap0), xs)
+            return state, metrics
+        return jax.jit(train_loop_ext,
+                       donate_argnums=(0,) if donate else ())
 
     def train_loop(state, batch, scheds):
         if per_round_batch:

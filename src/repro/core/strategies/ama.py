@@ -34,6 +34,14 @@ class AMAStrategy(ServerStrategy):
         the masked plane's zeroed body gradients."""
         return "classifier" if self.fl.fes_enabled else "full"
 
+    def mix_coefficient(self, t, sched, aux_state):
+        """Eq. 5: alpha_t = min(alpha0 + eta*t, cap) — the adaptive
+        schedule the fused mix applies this round."""
+        del sched, aux_state
+        fl = self.fl
+        return jnp.minimum(fl.alpha0 + fl.eta
+                           * jnp.asarray(t, jnp.float32), fl.alpha_cap)
+
     def aggregate(self, t, prev_global, client_params, sched, aux_state):
         on_time = jnp.logical_not(sched["delayed"])
         new_global = ama_aggregate(

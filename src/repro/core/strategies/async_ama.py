@@ -24,6 +24,27 @@ class AsyncAMAStrategy(AMAStrategy):
     def init_state(self, params):
         return {"queue": async_ama.init_queue(self.fl, params)}
 
+    def mix_coefficient(self, t, sched, aux_state):
+        """The REALIZED Eq. 10 alpha of this round: the Eq. 8 budget
+        A = alpha0 + eta*t renormalized by the staleness mass actually
+        arriving now — the popped slot's gamma^- after this round's
+        enqueue (the same order the update applies them). A pure
+        scalar replay of the ring-buffer bookkeeping; the buffer
+        itself is untouched."""
+        fl = self.fl
+        Q = aux_state["queue"]["gamma"].shape[0]
+        delays = sched["delays"]
+        arrival = (jnp.asarray(t, jnp.int32) + delays) % Q
+        g = (async_ama.gamma_unnorm(fl, delays)
+             * sched["delayed"].astype(jnp.float32))
+        onehot = jax.nn.one_hot(arrival, Q, dtype=jnp.float32) * g[:, None]
+        qgamma = aux_state["queue"]["gamma"] + jnp.sum(onehot, axis=0)
+        stale_gamma = qgamma[jnp.asarray(t, jnp.int32) % Q]
+        A = jnp.minimum(fl.alpha0 + fl.eta * jnp.asarray(t, jnp.float32),
+                        fl.alpha_cap)
+        return async_ama.ALPHA_UNNORM / (async_ama.ALPHA_UNNORM
+                                         + stale_gamma) * A
+
     def aggregate(self, t, prev_global, client_params, sched, aux_state):
         on_time = jnp.logical_not(sched["delayed"])
         queue = async_ama.enqueue(self.fl, aux_state["queue"], t,

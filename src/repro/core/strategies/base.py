@@ -100,6 +100,18 @@ class ServerStrategy:
         """The configured server-plane implementation."""
         return getattr(self.fl, "server_plane", "fused")
 
+    # ---------------------------------------------------- telemetry ----
+    def mix_coefficient(self, t, sched, aux_state):
+        """The EFFECTIVE previous-model mix coefficient alpha of this
+        round's server update — the telemetry plane's ``alpha_eff``
+        series (``repro.obs.metrics.round_metrics``). Pure, traced
+        inside the round (and the fused scan), must not touch the
+        update itself. Pure weighted-average rules (fedavg/fedprox)
+        keep the base 0; the AMA family reports the realized Eq. 5 /
+        Eq. 10 schedule."""
+        del t, sched, aux_state
+        return jnp.float32(0.0)
+
     # ---------------------------------------------------- client side ----
     def local_grad_transform(self, grads, params, global_params, fes_mask,
                              limited):

@@ -32,6 +32,13 @@ class FedOptStrategy(AMAStrategy):
         return {"m": zeros(), "v": zeros(),
                 "step": jnp.zeros((), jnp.int32)}
 
+    def mix_coefficient(self, t, sched, aux_state):
+        """FedOpt takes an Adam step on the pseudo-gradient rather than
+        a convex mix, so the AMA alpha it inherits does not describe
+        its update — report 0 like the other non-mix rules."""
+        del t, sched, aux_state
+        return jnp.float32(0.0)
+
     def aggregate(self, t, prev_global, client_params, sched, aux_state):
         del t  # fedopt keys its schedule on its own step counter
         fl = self.fl

@@ -48,22 +48,37 @@ from repro.core import strategies
 from repro.core.round import as_scan_scheds, init_state, make_train_loop
 from repro.data.pipeline import ChunkPrefetcher, partition_plan, stage_chunk
 from repro.exec.evals import Evaluator
+from repro.obs.metrics import stability_stats
+from repro.obs.timing import PhaseTimes, annotate
 
 
 @dataclass
 class History:
+    """Per-run metric record. ``test_acc[i]`` was measured after
+    ``eval_rounds[i]`` rounds (ABSOLUTE indices — a resumed run
+    continues the count), so the stability window is a span of ROUNDS
+    regardless of the eval cadence: with ``eval_every=5``,
+    ``stability_variance(last=50)`` covers the 10 eval points of the
+    last 50 rounds, not 50 eval points spanning 250 rounds (the seed's
+    silent unit confusion). The round-window math lives in
+    ``repro.obs.metrics.stability_stats`` — the report CLI calls the
+    same function on a metrics JSONL, which is why the two always
+    agree exactly."""
+
     test_acc: list = field(default_factory=list)
     test_loss: list = field(default_factory=list)
     train_loss: list = field(default_factory=list)
+    eval_rounds: list = field(default_factory=list)
 
     def stability_variance(self, last: int = 50) -> float:
         """Paper's stability metric: variance of test accuracy over the
-        last ``last`` rounds (in percentage points squared)."""
-        accs = np.array(self.test_acc[-last:]) * 100.0
-        return float(np.var(accs))
+        last ``last`` ROUNDS (in percentage points squared)."""
+        return stability_stats(self.eval_rounds, self.test_acc,
+                               last)["stability_variance"]
 
     def final_accuracy(self, last: int = 50) -> float:
-        return float(np.mean(self.test_acc[-last:]))
+        return stability_stats(self.eval_rounds, self.test_acc,
+                               last)["final_accuracy"]
 
 
 class ChunkRunner:
@@ -80,7 +95,7 @@ class ChunkRunner:
 
     def __init__(self, model, fl: FLConfig, strategy=None, *,
                  per_round_batch: bool = True, use_scan: bool = True,
-                 mesh=None, donate: bool = True):
+                 mesh=None, donate: bool = True, timer=None):
         self.model, self.fl = model, fl
         self.strategy = strategy or strategies.resolve(fl)
         self.per_round_batch = per_round_batch
@@ -92,6 +107,37 @@ class ChunkRunner:
         # callable keeps the two paths structurally identical
         self._loop = None
         self._donate = donate
+        # telemetry: phase wall-clock (repro.obs.timing.PhaseTimes).
+        # The first dispatch of a given chunk length is a fresh jit
+        # specialisation, so its wall time books under "compile"
+        # (trace + XLA compile + first execution); steady-state chunks
+        # book under "scan_dispatch" / "round_dispatch"
+        self.timer = timer if timer is not None else PhaseTimes()
+        self._compiled: set = set()
+
+    def _dispatch(self, loop, state, batch, scheds, n: int, *,
+                  scan: bool):
+        key = (n, self.per_round_batch)
+        phase = ("compile" if key not in self._compiled
+                 else ("scan_dispatch" if scan and n > 1
+                       else "round_dispatch"))
+        self._compiled.add(key)
+        with self.timer.phase(phase) as span, \
+                annotate(f"train_chunk_n{n}"):
+            if getattr(self.fl, "extended_metrics", False):
+                # extended telemetry: the loop takes a shadow tap — a
+                # device COPY of the entering {params, aux} (separate
+                # buffers keep donation usable and keep XLA from
+                # value-numbering the tap onto the live carry; see
+                # make_train_loop). The copy is O(model), once per
+                # dispatch — noise next to the chunk's training work.
+                tap0 = jax.tree.map(jnp.copy, {"params": state["params"],
+                                               "aux": state["aux"]})
+                out = loop(state, batch, scheds, tap0)
+            else:
+                out = loop(state, batch, scheds)
+            span.sync(out)
+        return out
 
     def _ctx(self):
         return self.mesh if self.mesh is not None else (
@@ -138,14 +184,16 @@ class ChunkRunner:
         with self._ctx():
             loop = self._train_loop()
             if self.use_scan and scan_ok:
-                state, metrics = loop(state, batch, scheds)
+                state, metrics = self._dispatch(loop, state, batch,
+                                                scheds, n, scan=True)
             else:
                 rows = []
                 for r in range(n):
                     b = (jax.tree.map(lambda x: x[r:r + 1], batch)
                          if self.per_round_batch else batch)
                     sc = jax.tree.map(lambda x: x[r:r + 1], scheds)
-                    state, m = loop(state, b, sc)
+                    state, m = self._dispatch(loop, state, b, sc, 1,
+                                              scan=False)
                     rows.append(jax.tree.map(lambda x: x[0], m))
                 metrics = {k: jnp.stack([m[k] for m in rows])
                            for k in rows[0]}
@@ -166,7 +214,7 @@ class SimulationEngine:
     def __init__(self, model, fl: FLConfig, clients, test_data,
                  eval_fn=None, eval_batch: int = 512, environment=None,
                  use_scan: bool = True, mesh=None, prefetch: bool = True,
-                 donate: bool = True):
+                 donate: bool = True, logger=None):
         self.model = model
         self.fl = fl
         # clients: a dense list[ClientDataset] OR a VirtualClientShards
@@ -194,6 +242,12 @@ class SimulationEngine:
         self._evaluator = (None if eval_fn is not None
                            else Evaluator(model, test_data, eval_batch))
         self.prefetch = prefetch
+        # telemetry plane: one PhaseTimes spans runner + data plane +
+        # eval + checkpointing; an optional MetricsLogger (repro.obs.log)
+        # receives per-round rows, eval points and the phase summary
+        self.timer = PhaseTimes()
+        self.runner.timer = self.timer
+        self.logger = logger
         self.data = clients.data if self._streamed else clients[0].data
         if not self._streamed and any(c.data is not self.data
                                       for c in clients):
@@ -220,7 +274,8 @@ class SimulationEngine:
     def save(self, path: str) -> None:
         """Checkpoint the WHOLE round state (params, round index, aux:
         async ring buffer, fedopt moments, ...)."""
-        save_state(path, self.state)
+        with self.timer.phase("checkpoint"):
+            save_state(path, self.state)
 
     def resume(self, path: str) -> None:
         """Bit-identical continuation: restore {params, t, aux}; staging
@@ -236,10 +291,15 @@ class SimulationEngine:
         return self.fl.local_epochs * per_epoch
 
     def _stage(self, t0: int, n: int):
-        sb = self.env.batch(t0, n)
-        batch = stage_chunk(self.data, self.clients, sb["selected"],
-                            self.fl.seed, t0, self._steps_per_round(),
-                            self.fl.local_batch_size)
+        # runs on the prefetcher's worker thread during overlapped
+        # execution — PhaseTimes is thread-safe, so "stage" seconds
+        # accumulate either way (they OVERLAP device phases by design)
+        with self.timer.phase("stage"), annotate(f"stage_t{t0}"):
+            sb = self.env.batch(t0, n)
+            batch = stage_chunk(self.data, self.clients, sb["selected"],
+                                self.fl.seed, t0,
+                                self._steps_per_round(),
+                                self.fl.local_batch_size)
         return sb, batch
 
     def run_round(self) -> float:
@@ -251,15 +311,22 @@ class SimulationEngine:
         return float(metrics["loss"][0])
 
     def evaluate(self) -> tuple[float, float]:
-        if self._eval_fn is not None:
-            return self._eval_fn(self.state["params"], self.test_data)
-        return self._evaluator(self.state["params"])
+        with self.timer.phase("eval"), annotate("eval"):
+            if self._eval_fn is not None:
+                return self._eval_fn(self.state["params"],
+                                     self.test_data)
+            return self._evaluator(self.state["params"])
 
     def run(self, rounds: int | None = None, eval_every: int = 1,
             verbose: bool = False) -> History:
         hist = History()
         rounds = rounds or self.fl.rounds
         t0, end = self.t, self.t + rounds
+        if self.logger is not None:
+            from repro.obs.metrics import payload_bytes
+            self.logger.header(self.fl,
+                               payload=payload_bytes(self.params),
+                               resumed_at=t0 if t0 else None)
         # chunk boundaries sit on ABSOLUTE multiples of eval_every, so a
         # resumed run evaluates at the same global rounds as the
         # uninterrupted run it continues (off-cadence head/tail chunks
@@ -278,10 +345,15 @@ class SimulationEngine:
                 self.state, metrics = self.runner.run_chunk(
                     self.state, batch, sb, scan_ok=(n == eval_every))
                 hist.train_loss.extend(float(x) for x in metrics["loss"])
+                if self.logger is not None:
+                    self.logger.rounds(t, metrics)
                 if (t + n) % eval_every == 0:    # partial chunks: no eval
                     acc, loss = self.evaluate()
                     hist.test_acc.append(acc)
                     hist.test_loss.append(loss)
+                    hist.eval_rounds.append(t + n)
+                    if self.logger is not None:
+                        self.logger.eval(t + n, acc, loss)
                     done = t + n - t0
                     if verbose and done % 10 == 0:
                         print(f"  round {done:4d} "
@@ -290,4 +362,6 @@ class SimulationEngine:
         finally:
             if isinstance(staged, ChunkPrefetcher):
                 staged.close()           # abandoned mid-run: release the
-        return hist                      # worker + buffered chunks
+            if self.logger is not None:  # worker + buffered chunks
+                self.logger.phases(self.timer)
+        return hist

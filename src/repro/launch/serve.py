@@ -6,7 +6,6 @@ model with a KV cache — the deployment half of the framework.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +15,7 @@ from repro.checkpoint.io import restore_params
 from repro.configs.base import reduced
 from repro.configs.registry import serving_config
 from repro.models.api import build_model
+from repro.obs.timing import annotate, profile_trace, sync_time
 
 
 def batched_decode(model, params, prompts, max_new: int, max_len: int):
@@ -31,15 +31,18 @@ def batched_decode(model, params, prompts, max_new: int, max_len: int):
         cache = model.init_decode_cache(params, B, max_len)
     step = jax.jit(model.decode_step)
     # prefill token-by-token (teacher forcing: only the cache matters)
-    for t in range(P - 1):
-        _, cache = step(params, prompts[:, t],
-                        jnp.full((B,), t, jnp.int32), cache)
+    with annotate("prefill"):
+        for t in range(P - 1):
+            _, cache = step(params, prompts[:, t],
+                            jnp.full((B,), t, jnp.int32), cache)
     out = [prompts]
     tok = prompts[:, -1]
-    for t in range(P - 1, P - 1 + max_new):
-        logits, cache = step(params, tok, jnp.full((B,), t, jnp.int32), cache)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(tok[:, None])
+    with annotate("decode"):
+        for t in range(P - 1, P - 1 + max_new):
+            logits, cache = step(params, tok,
+                                 jnp.full((B,), t, jnp.int32), cache)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(tok[:, None])
     return jnp.concatenate(out, axis=1)
 
 
@@ -51,6 +54,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap decoding in jax.profiler.trace(DIR) with "
+                         "named prefill/decode regions")
     args = ap.parse_args()
 
     cfg = serving_config(args.arch)
@@ -67,10 +73,13 @@ def main():
     prompts = jnp.asarray(
         rng.randint(1, cfg.vocab_size, (args.batch, args.prompt_len)),
         jnp.int32)
-    t0 = time.time()
-    out = batched_decode(model, params, prompts, args.tokens,
-                         args.prompt_len + args.tokens + 1)
-    dt = time.time() - t0
+    # obs.timing.sync_time: perf_counter + block_until_ready on the
+    # decoded tokens — the seed's time.time() span closed while the
+    # final decode steps were still in flight, inflating tok/s
+    with profile_trace(args.profile):
+        dt, out = sync_time(batched_decode, model, params, prompts,
+                            args.tokens,
+                            args.prompt_len + args.tokens + 1)
     n_new = args.batch * args.tokens
     print(f"decoded {n_new} tokens in {dt:.2f}s "
           f"({n_new / dt:.1f} tok/s on CPU)")

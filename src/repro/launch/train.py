@@ -26,6 +26,12 @@ is bit-identical to an uninterrupted run.
 (repro.env.scenarios) — adding a strategy/environment/scenario file
 extends this launcher with no edits here.
 
+``--metrics-out run.jsonl`` switches on the telemetry plane
+(``repro.obs``): per-round staleness/participation/mix/norm/wire series
+as schema-versioned JSONL plus a phase-time summary (summarize with
+``python -m repro.obs.report run.jsonl``); ``--profile DIR`` wraps the
+run in a ``jax.profiler`` trace with named chunk/eval regions.
+
 Examples:
   python -m repro.launch.train --arch paper-cnn --rounds 60 --p-limited 0.5
   python -m repro.launch.train --algorithm fedopt --rounds 5 --eval-every 5
@@ -37,7 +43,6 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +63,21 @@ from repro.data.synth import make_image_classification, make_lm_tokens
 from repro.exec import ChunkRunner
 from repro.launch.mesh import engine_mesh
 from repro.models.api import build_model
+from repro.obs.log import MetricsLogger
+from repro.obs.metrics import payload_bytes
+from repro.obs.timing import profile_trace, sync_time
+
+
+def _logger(args) -> MetricsLogger | None:
+    return MetricsLogger(args.metrics_out) if args.metrics_out else None
+
+
+def _print_phases(timer) -> None:
+    summary = timer.summary()
+    if summary:
+        print("phases: " + "  ".join(
+            f"{k}={v['seconds']:.2f}s/{v['calls']}"
+            for k, v in summary.items()))
 
 
 def paper_scale(args, fl: FLConfig):
@@ -76,19 +96,27 @@ def paper_scale(args, fl: FLConfig):
         clients = build_clients(
             train,
             shard_partition(train["label"], fl.num_clients, seed=fl.seed))
+    logger = _logger(args)
     sim = FederatedSimulation(model, fl, clients, test,
                               use_scan=not args.no_scan,
-                              mesh=engine_mesh(fl.clients_per_round))
+                              mesh=engine_mesh(fl.clients_per_round),
+                              logger=logger)
     if args.resume:
         sim.resume(args.resume)
         print(f"resumed {args.resume} at round {sim.t}")
-    hist = sim.run(rounds=args.rounds, eval_every=args.eval_every,
-                   verbose=True)
+    with profile_trace(args.profile):
+        hist = sim.run(rounds=args.rounds, eval_every=args.eval_every,
+                       verbose=True)
     print(f"final: acc={hist.final_accuracy():.4f} "
           f"stability_var={hist.stability_variance():.3f}")
+    _print_phases(sim.timer)
     if args.checkpoint:
         sim.save(args.checkpoint)
         print(f"saved {args.checkpoint} (full round state, t={sim.t})")
+    if logger is not None:
+        logger.close()
+        print(f"metrics -> {args.metrics_out} "
+              f"(python -m repro.obs.report {args.metrics_out})")
     return hist
 
 
@@ -126,36 +154,53 @@ def pod_scale(args, fl: FLConfig):
     runner = ChunkRunner(model, fl, strategy, per_round_batch=False,
                          use_scan=not args.no_scan, mesh=engine_mesh(C))
 
+    logger = _logger(args)
+    if logger is not None:
+        logger.header(fl, payload=payload_bytes(state["params"]),
+                      resumed_at=int(state["t"]) or None)
+
     t_start = int(state["t"])
-    t0 = time.time()
-    if args.no_scan:
-        # stream per-round progress (a multi-hour pod run must not be
-        # silent): one-round chunks through the same runner
-        for r in range(args.rounds):
-            tr = time.time()
-            state, m = runner.run_chunk(
-                state, batch, environment.batch(t_start + r, 1),
-                scan_ok=False)
-            print(f"round {r}: loss={float(m['loss'][0]):.4f} on_time="
-                  f"{int(m['n_on_time'][0])}/{C} ({time.time()-tr:.2f}s)")
-        dt = time.time() - t0
-    else:
-        state, metrics = runner.run_chunk(
-            state, batch, environment.batch(t_start, args.rounds))
-        jax.block_until_ready(state["params"])
-        dt = time.time() - t0
-        losses = np.asarray(metrics["loss"])
-        on_time = np.asarray(metrics["n_on_time"])
-        for r in range(args.rounds):
-            print(f"round {r}: loss={losses[r]:.4f} "
-                  f"on_time={int(on_time[r])}/{C}")
+    # timing through obs.timing: perf_counter spans closed by
+    # block_until_ready — JAX dispatch is async, so the seed's bare
+    # time.time() around run_chunk measured enqueue, not execution
+    dt = 0.0
+    with profile_trace(args.profile):
+        if args.no_scan:
+            # stream per-round progress (a multi-hour pod run must not
+            # be silent): one-round chunks through the same runner
+            for r in range(args.rounds):
+                tr, (state, m) = sync_time(
+                    runner.run_chunk, state, batch,
+                    environment.batch(t_start + r, 1), scan_ok=False)
+                dt += tr
+                if logger is not None:
+                    logger.rounds(t_start + r, m)
+                print(f"round {r}: loss={float(m['loss'][0]):.4f} "
+                      f"on_time={int(m['n_on_time'][0])}/{C} "
+                      f"({tr:.2f}s)")
+        else:
+            dt, (state, metrics) = sync_time(
+                runner.run_chunk, state, batch,
+                environment.batch(t_start, args.rounds))
+            if logger is not None:
+                logger.rounds(t_start, metrics)
+            losses = np.asarray(metrics["loss"])
+            on_time = np.asarray(metrics["n_on_time"])
+            for r in range(args.rounds):
+                print(f"round {r}: loss={losses[r]:.4f} "
+                      f"on_time={int(on_time[r])}/{C}")
     engine = "per-round jit loop" if args.no_scan else "one fused scan"
     print(f"{args.rounds} rounds ({engine}): {dt:.2f}s total "
           f"({dt/args.rounds*1e3:.1f} ms/round incl. compile)")
+    _print_phases(runner.timer)
     if args.checkpoint:
         save_state(args.checkpoint, state)
         print(f"saved {args.checkpoint} (full round state, "
               f"t={int(state['t'])})")
+    if logger is not None:
+        logger.phases(runner.timer)
+        logger.close()
+        print(f"metrics -> {args.metrics_out}")
     return state
 
 
@@ -230,6 +275,14 @@ def main():
     ap.add_argument("--batch", type=int, default=2, help="pod: per-step batch")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--n-train", type=int, default=1500)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write schema-versioned telemetry JSONL here "
+                         "(switches on fl.extended_metrics: per-round "
+                         "staleness/participation/mix/norm/wire series; "
+                         "summarize with python -m repro.obs.report)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap the run in jax.profiler.trace(DIR) with "
+                         "named chunk/eval regions (TensorBoard trace)")
     ap.add_argument("--checkpoint", default=None,
                     help="save the full round state {params, t, aux} here")
     ap.add_argument("--resume", default=None,
@@ -258,6 +311,8 @@ def main():
         fl = get_scenario(args.scenario).apply(fl)
         if args.trace_path:       # an explicit recording beats the
             fl = fl.with_(trace_path=args.trace_path)  # scenario default
+    if args.metrics_out:
+        fl = fl.with_(extended_metrics=True)
     if args.pod:
         pod_scale(args, fl)
     else:

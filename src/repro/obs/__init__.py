@@ -1,0 +1,37 @@
+"""The federation telemetry plane.
+
+The paper's headline claims are OBSERVABILITY claims — training
+stability ("up to 93.10%" lower accuracy variance), staleness tolerance
+("up to 15 rounds") — so the repo carries a telemetry layer that records
+what the AMA mix, the staleness weighting and the environment actually
+did each round, without perturbing the run:
+
+  * ``obs.metrics``    — in-scan per-round metric computation (rides the
+    fused ``lax.scan`` ys; enabling it never changes params) + the pure
+    numpy stability/windowing math shared by ``History`` and the report
+    CLI so both reproduce each other exactly;
+  * ``obs.log``        — ``MetricsLogger``: schema-versioned JSONL sink
+    the execution engine feeds per chunk (``--metrics-out``);
+  * ``obs.timing``     — ``PhaseTimes`` scoped wall-clock phases
+    (staging / compile / scan dispatch / eval / checkpoint) built on
+    ``perf_counter`` + ``block_until_ready`` (async JAX dispatch makes
+    naive ``time.time()`` spans fiction), and the ``jax.profiler``
+    trace/annotation hooks behind ``--profile``;
+  * ``obs.provenance`` — the shared provenance block (jax version,
+    backend, device count, git sha) every ``BENCH_*.json`` writer
+    stamps, so a benchmark regression reports WHAT regressed;
+  * ``obs.report``     — the run-report CLI:
+    ``python -m repro.obs.report run.jsonl [--compare other.jsonl]``.
+"""
+from __future__ import annotations
+
+from repro.obs.log import SCHEMA_VERSION, MetricsLogger
+from repro.obs.metrics import (ROUND_METRIC_KEYS, payload_bytes,
+                               round_metrics, stability_stats)
+from repro.obs.provenance import provenance
+from repro.obs.timing import PhaseTimes, annotate, profile_trace, sync_time
+
+__all__ = ["SCHEMA_VERSION", "MetricsLogger", "ROUND_METRIC_KEYS",
+           "payload_bytes", "round_metrics", "stability_stats",
+           "provenance", "PhaseTimes", "annotate", "profile_trace",
+           "sync_time"]

@@ -1,0 +1,131 @@
+"""In-scan round metrics + the shared stability/windowing math.
+
+``round_metrics`` is traced INSIDE the jitted round step (and therefore
+inside the fused multi-round ``lax.scan``), so the per-round series ride
+the scan ys and come back stacked with zero extra dispatches. Every
+quantity is a pure function of values the round already materializes
+(the schedule arrays, the stacked client params, the pre/post global
+model, the strategy aux state) — enabling it never changes the params
+stream (bit-identity gated by tests/test_obs.py).
+
+``stability_stats`` is the ONE implementation of the paper's stability
+window (variance of test accuracy over the last ``last`` ROUNDS — not
+eval points, which silently diverge from rounds whenever
+``eval_every > 1``). ``exec.engine.History`` and the report CLI
+(``repro.obs.report``) both call it, which is what makes the report
+reproduce ``History.final_accuracy`` / ``stability_variance`` exactly
+from a JSONL file alone.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: per-round metric keys an extended-metrics run emits (beyond the
+#: base {"loss", "n_on_time"}); ``stale_hist`` is a vector of
+#: ``max_delay + 1`` staleness-bin counts, everything else a scalar
+ROUND_METRIC_KEYS = ("n_limited", "n_delayed", "mean_delay", "stale_hist",
+                     "alpha_eff", "delta_norm", "update_norm",
+                     "bytes_on_wire")
+
+
+def payload_bytes(params) -> int:
+    """Static bytes of ONE client's model-update upload (the full
+    parameter pytree at its stored dtypes). An upper bound under FES —
+    a limited client whose body delta is identically zero could ship
+    the classifier subtree only; the wire estimate charges the dense
+    tree the engine actually moves."""
+    return int(sum(x.size * jnp.dtype(x.dtype).itemsize
+                   for x in jax.tree.leaves(params)))
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    """f32 l2 norm over every element of every leaf."""
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def round_metrics(fl, strategy, t, prev_global, client_params, new_params,
+                  sched, aux_state, *, payload: int) -> dict:
+    """The extended per-round metric dict (all traced, fixed shapes).
+
+    * participation: ``n_limited`` / ``n_delayed`` cohort counts;
+    * staleness: ``mean_delay`` over the delayed cohorts and
+      ``stale_hist`` — bincount of delays into ``max_delay + 1`` static
+      bins (bin d = cohorts arriving d rounds late);
+    * aggregation: ``alpha_eff`` — the strategy's effective
+      previous-model mix coefficient this round
+      (``ServerStrategy.mix_coefficient``: the realized Eq. 5 / Eq. 10
+      alpha for the AMA family, 0 for pure weighted-average rules);
+    * magnitudes: ``delta_norm`` — global l2 norm of the stacked
+      client deltas (client_params - prev_global over all C cohorts),
+      ``update_norm`` — l2 norm of the server step actually taken;
+    * wire: ``bytes_on_wire`` = on-time uploads x the static per-client
+      payload (delayed cohorts are charged on their arrival round via
+      the staleness path they ride).
+    """
+    delayed = sched["delayed"].astype(jnp.float32)
+    delays = sched["delays"].astype(jnp.float32)
+    n_delayed = jnp.sum(delayed)
+    n_on_time = sched["delayed"].shape[0] - n_delayed
+    bins = int(max(getattr(fl, "max_delay", 0), 0)) + 1
+    d_int = sched["delays"].astype(jnp.int32)
+    onehot = (d_int[:, None] == jnp.arange(bins)[None, :]).astype(
+        jnp.float32) * delayed[:, None]
+    stale_hist = jnp.sum(onehot, axis=0).astype(jnp.int32)
+    mean_delay = jnp.sum(delays * delayed) / jnp.maximum(n_delayed, 1.0)
+    deltas = jax.tree.map(
+        lambda c, p: c.astype(jnp.float32)
+        - p.astype(jnp.float32)[None], client_params, prev_global)
+    step = jax.tree.map(
+        lambda n, p: n.astype(jnp.float32) - p.astype(jnp.float32),
+        new_params, prev_global)
+    return {
+        "n_limited": jnp.sum(sched["limited"].astype(jnp.int32)),
+        "n_delayed": n_delayed.astype(jnp.int32),
+        "mean_delay": mean_delay,
+        "stale_hist": stale_hist,
+        "alpha_eff": jnp.asarray(
+            strategy.mix_coefficient(t, sched, aux_state), jnp.float32),
+        "delta_norm": _global_norm(deltas),
+        "update_norm": _global_norm(step),
+        "bytes_on_wire": n_on_time * jnp.float32(payload),
+    }
+
+
+# ------------------------------------------------------------------
+# host-side stability math (pure numpy — shared History/report code)
+# ------------------------------------------------------------------
+
+def window_by_rounds(eval_rounds, last: int) -> np.ndarray:
+    """Boolean mask over eval points selecting the last ``last`` ROUNDS:
+    an eval at absolute round t is in the window iff
+    t > max(eval_rounds) - last. With ``eval_every == 1`` this is
+    exactly "the last ``last`` eval points"; with a sparser cadence it
+    keeps the window a fixed span of ROUNDS instead of silently
+    widening it by the cadence factor."""
+    rounds = np.asarray(eval_rounds, np.int64)
+    if rounds.size == 0:
+        return np.zeros((0,), bool)
+    return rounds > (rounds.max() - int(last))
+
+
+def stability_stats(eval_rounds, test_acc, last: int = 50) -> dict:
+    """Paper metrics over the last ``last`` rounds: mean accuracy and
+    the stability variance (variance of test accuracy in percentage
+    points squared). The single implementation behind both
+    ``History.final_accuracy``/``stability_variance`` and the report
+    CLI."""
+    accs = np.asarray(test_acc, np.float64)
+    if len(eval_rounds) == len(accs):
+        accs = accs[window_by_rounds(eval_rounds, last)]
+    else:                     # legacy History with no round indices:
+        accs = accs[-last:]   # fall back to counting eval points
+    if accs.size == 0:
+        return {"final_accuracy": float("nan"),
+                "stability_variance": float("nan"), "n_evals": 0}
+    return {"final_accuracy": float(np.mean(accs)),
+            "stability_variance": float(np.var(accs * 100.0)),
+            "n_evals": int(accs.size)}

@@ -1,0 +1,59 @@
+"""The shared provenance block for every machine-readable artifact.
+
+A benchmark regression gate that only says "sim_engine dropped below
+0.9x" forces archaeology; one that says "baseline was jax 0.4.30 on
+cpu x1 at sha 4178aca, fresh is jax 0.4.38 on cpu x1 at sha deadbee"
+names the suspect. Every ``BENCH_*.json`` writer and every metrics
+JSONL header stamps ``provenance()`` so ``scripts/check_bench.py`` and
+``repro.obs.report --compare`` can report WHAT changed between two
+artifacts, not just that something did.
+"""
+from __future__ import annotations
+
+import os
+import platform
+import subprocess
+import time
+
+import jax
+
+#: provenance keys whose mismatch between a baseline and a fresh run is
+#: worth flagging next to a benchmark delta
+COMPARE_KEYS = ("jax_version", "backend", "device_count", "git_sha",
+                "python")
+
+
+def git_sha(cwd: str | None = None) -> str:
+    """Short HEAD sha of the repo containing this file ("" offline)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=cwd or os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=5)
+        return out.stdout.strip() if out.returncode == 0 else ""
+    except Exception:
+        return ""
+
+
+def provenance() -> dict:
+    """Environment fingerprint of the producing process."""
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "git_sha": git_sha(),
+        "generated_unix": round(time.time(), 3),
+    }
+
+
+def diff(a: dict | None, b: dict | None) -> list[str]:
+    """Human-readable provenance mismatches between two artifacts
+    ("jax_version: 0.4.30 -> 0.4.38"); [] when identical or either
+    side predates provenance stamping."""
+    if not a or not b:
+        return []
+    return [f"{k}: {a[k]} -> {b[k]}"
+            for k in COMPARE_KEYS
+            if k in a and k in b and a[k] != b[k]]
