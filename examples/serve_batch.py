@@ -1,36 +1,67 @@
-"""Batched serving of a federated-trained model with a KV cache.
+"""Batched serving of a federated-trained model through the engine API.
 
-Covers three cache families: dense GQA ring-buffer attention (minitron
-SWA variant), RWKV-6 recurrent state, and whisper's cross+self caches.
+Covers three cache families and picks the richest engine each supports:
 
-    PYTHONPATH=src python examples/serve_batch.py
+- minitron (dense GQA, sliding-window ring) -> ``PagedEngine``: paged
+  KV pool, jitted chunked prefill, continuous batching
+- rwkv6 (recurrent state, no KV cache) -> ``LoopEngine`` per-token
+- whisper (cross+self caches) -> ``LoopEngine`` with chunked prefill
+
+Every engine serves the same variable-length request mix and reports
+tokens/sec plus per-request latency percentiles.
+
+    PYTHONPATH=src python examples/serve_batch.py [--smoke]
 """
+import sys
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import reduced
 from repro.configs.registry import serving_config
-from repro.launch.serve import batched_decode
 from repro.models.api import build_model
+from repro.serve import LoopEngine, PagedEngine, Request
 
 
-def main():
-    rng = np.random.RandomState(0)
+def _requests(vocab: int, lens, max_new: int, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    return [Request(rid=i, max_new=max_new,
+                    prompt=rng.randint(1, vocab, (ln,)).tolist())
+            for i, ln in enumerate(lens)]
+
+
+def _engine_for(model, params, smoke: bool):
+    """Richest engine the model family supports (see module doc)."""
+    if model.prefill_paged is not None:
+        return "paged", PagedEngine(model, params, max_slots=4,
+                                    block_size=8, prefill_chunk=8)
+    if model.prefill is not None:
+        return "loop+prefill", LoopEngine(model, params, prefill_chunk=8)
+    return "loop", LoopEngine(model, params)
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    lens = [8, 8, 20, 20] if smoke else [8, 8, 8, 24, 24, 40]
+    max_new = 4 if smoke else 12
     for arch in ["minitron-8b", "rwkv6-3b", "whisper-medium"]:
         cfg = reduced(serving_config(arch))
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        B, P, new = 4, 8, 12
-        prompts = jnp.asarray(rng.randint(1, cfg.vocab_size, (B, P)),
-                              jnp.int32)
+        kind, eng = _engine_for(model, params, smoke)
         t0 = time.time()
-        out = batched_decode(model, params, prompts, new, P + new + 1)
+        results = eng.run(_requests(cfg.vocab_size, lens, max_new))
         dt = time.time() - t0
-        print(f"{arch:16s}: {B}x{new} tokens in {dt:5.2f}s "
-              f"({B * new / dt:6.1f} tok/s CPU), out shape {out.shape}")
+        s = eng.last_summary
+        assert len(results) == len(lens)
+        assert all(r["new_tokens"] == max_new for r in results)
+        print(f"{arch:16s} [{kind:12s}]: {len(lens)} reqs x {max_new} "
+              f"tokens in {dt:5.2f}s ({s['tokens_per_s']:7.1f} tok/s, "
+              f"p95 {s['p95_ms']:.1f}ms)")
+    if smoke:
+        print("serve_batch.smoke,ok,")
 
 
 if __name__ == "__main__":

@@ -46,6 +46,12 @@ GATES = {
     "federation_scale": ("BENCH_federation_scale.json",
                          lambda rec: rec["scale_ratio"],
                          lambda base: base["smoke"]["gate"]),
+    # paged continuous-batching engine vs seed per-token loop on the
+    # mixed-prompt-length mixture; a regression means chunked prefill
+    # or the decode bursts fell back to per-token dispatch
+    "serve_plane": ("BENCH_serve_plane.json",
+                    lambda rec: rec["speedup"],
+                    lambda base: base["smoke"]["gate"]),
 }
 
 

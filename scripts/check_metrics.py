@@ -10,6 +10,9 @@ cannot land green.
 Usage:  PYTHONPATH=src python scripts/check_metrics.py run.jsonl [...]
         ... check_metrics.py --require-extended run.jsonl   # round rows
         must carry the extended series (staleness/mix/norm/wire)
+        ... check_metrics.py --require-serve serve.jsonl    # serving
+        runs: per-request serve rows (with latency series) + one
+        serve_summary row must be present
 """
 from __future__ import annotations
 
@@ -20,7 +23,8 @@ from repro.obs.log import read_rows, validate_rows
 from repro.obs.metrics import ROUND_METRIC_KEYS
 
 
-def check(path: str, require_extended: bool = False) -> list[str]:
+def check(path: str, require_extended: bool = False,
+          require_serve: bool = False) -> list[str]:
     try:
         rows = read_rows(path)
     except (OSError, ValueError) as e:
@@ -35,6 +39,20 @@ def check(path: str, require_extended: bool = False) -> list[str]:
             if missing:
                 errs.append(f"extended series {k!r} missing from "
                             f"{missing}/{len(rnd)} round rows")
+    if require_serve:
+        from repro.obs.log import SERVE_LATENCY_KEYS
+        srv = [r for r in rows if r.get("kind") == "serve"]
+        summ = [r for r in rows if r.get("kind") == "serve_summary"]
+        if not srv:
+            errs.append("no serve rows")
+        if len(summ) != 1:
+            errs.append(f"expected exactly 1 serve_summary row, "
+                        f"got {len(summ)}")
+        for k in SERVE_LATENCY_KEYS:
+            missing = sum(1 for r in srv if k not in r)
+            if missing:
+                errs.append(f"latency series {k!r} missing from "
+                            f"{missing}/{len(srv)} serve rows")
     return errs
 
 
@@ -44,10 +62,13 @@ def main(argv=None) -> int:
     ap.add_argument("--require-extended", action="store_true",
                     help="fail unless round rows carry the extended "
                          "telemetry series")
+    ap.add_argument("--require-serve", action="store_true",
+                    help="fail unless per-request serve rows and one "
+                         "serve_summary row are present")
     args = ap.parse_args(argv)
     failed = False
     for path in args.paths:
-        errs = check(path, args.require_extended)
+        errs = check(path, args.require_extended, args.require_serve)
         if errs:
             failed = True
             for e in errs:
@@ -56,7 +77,10 @@ def main(argv=None) -> int:
             rows = read_rows(path)
             n_round = sum(r.get("kind") == "round" for r in rows)
             n_eval = sum(r.get("kind") == "eval" for r in rows)
-            print(f"{path}: OK ({n_round} round rows, {n_eval} evals)")
+            n_serve = sum(r.get("kind") == "serve" for r in rows)
+            extra = f", {n_serve} serve rows" if n_serve else ""
+            print(f"{path}: OK ({n_round} round rows, {n_eval} evals"
+                  f"{extra})")
     return 1 if failed else 0
 
 

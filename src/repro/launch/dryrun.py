@@ -125,7 +125,7 @@ def prefill_lowering(cfg: ModelConfig, shape: ShapeConfig, mesh):
     p_sh = sh.params_shardings(params_like, cfg, smesh, train=False)
     b_sh = sh.batch_shardings(batch, smesh, train=False)
 
-    jitted = jax.jit(model.prefill, in_shardings=(p_sh, b_sh),
+    jitted = jax.jit(model.prefill_logits, in_shardings=(p_sh, b_sh),
                      out_shardings=None)
     with smesh:
         lowered = jitted.lower(params_like, batch)

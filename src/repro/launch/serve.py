@@ -1,11 +1,32 @@
-"""Serving launcher: batched greedy decoding of the (federated) global
-model with a KV cache — the deployment half of the framework.
+"""Serving launcher: a thin front over the serving engines.
 
   python -m repro.launch.serve --arch minitron-8b --reduced --tokens 16
+  python -m repro.launch.serve --arch minitron-8b --reduced \
+      --engine paged --prompt-mix 6x2,20x2 --max-batch-tokens 256 \
+      --metrics-out serve.jsonl
+
+Engines (src/repro/serve/):
+  loop   lockstep per-token decode with per-request prompt lengths
+         (padded positions never enter the KV cache); with
+         --prefill-chunk > 0 the shared prompt prefix is prefilled in
+         jitted chunks, bit-identically to the per-token path.
+  paged  continuous batching over a shared paged KV pool: FIFO
+         token-budget admission (--max-batch-tokens), per-request block
+         tables, chunked prefill straight into the pool.
+
+Workload: either a uniform batch (--batch x --prompt-len), a mixture
+(--prompt-mix "LENxCOUNT,..."), or a request trace (--trace, JSONL rows
+{"id": int, "prompt_len": int | "prompt": [ids], "max_new": int}).
+
+--metrics-out streams schema-versioned serving telemetry (one "serve"
+row per request: queue/prefill/decode seconds; one "serve_summary" row:
+tokens/sec + p50/p95/p99) through obs.log.MetricsLogger — validated by
+scripts/check_metrics.py --require-serve.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import jax.numpy as jnp
@@ -15,49 +36,103 @@ from repro.checkpoint.io import restore_params
 from repro.configs.base import reduced
 from repro.configs.registry import serving_config
 from repro.models.api import build_model
-from repro.obs.timing import annotate, profile_trace, sync_time
+from repro.obs.timing import profile_trace, sync_time
+from repro.serve import LoopEngine, PagedEngine, Request
 
 
-def batched_decode(model, params, prompts, max_new: int, max_len: int):
-    """prompts: (B, P) int32. Greedy decode max_new tokens."""
-    cfg = model.cfg
+def batched_decode(model, params, prompts, max_new: int, max_len: int,
+                   lengths=None):
+    """prompts: (B, P) int32. Greedy decode max_new tokens.
+
+    ``lengths`` (optional, (B,) ints) gives each row's REAL prompt
+    length; rows are right-padded to P but padded positions never enter
+    the KV cache — each row decodes from its own length. Without it
+    every row is taken at full length P (the seed behaviour for
+    uniform batches). Returns (B, P + max_new) int32.
+    """
     assert prompts.ndim == 2 and prompts.shape[1] >= 1, \
         f"prompts must be (B, P>=1) int32, got {prompts.shape}"
     B, P = prompts.shape
-    if cfg.family == "audio":
-        fe = jnp.zeros((B, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
-        cache = model.init_decode_cache(params, fe, max_len)
-    else:
-        cache = model.init_decode_cache(params, B, max_len)
-    step = jax.jit(model.decode_step)
-    # prefill token-by-token (teacher forcing: only the cache matters)
-    with annotate("prefill"):
-        for t in range(P - 1):
-            _, cache = step(params, prompts[:, t],
-                            jnp.full((B,), t, jnp.int32), cache)
-    out = [prompts]
-    tok = prompts[:, -1]
-    with annotate("decode"):
-        for t in range(P - 1, P - 1 + max_new):
-            logits, cache = step(params, tok,
-                                 jnp.full((B,), t, jnp.int32), cache)
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            out.append(tok[:, None])
-    return jnp.concatenate(out, axis=1)
+    lens = [int(x) for x in (lengths if lengths is not None
+                             else [P] * B)]
+    host = np.asarray(prompts)
+    reqs = [Request(rid=b, prompt=host[b, :lens[b]].tolist(),
+                    max_new=max_new) for b in range(B)]
+    results = LoopEngine(model, params).run(reqs)
+    out = np.asarray(prompts).copy()
+    gen = np.zeros((B, max_new), np.int32)
+    for b, r in enumerate(results):
+        gen[b] = r["tokens"][lens[b]:lens[b] + max_new]
+    return jnp.concatenate([jnp.asarray(out), jnp.asarray(gen)], axis=1)
 
 
-def main():
+def _mixture_requests(spec: str, max_new: int, vocab: int, seed: int = 0):
+    """'8x4,24x2' -> 4 prompts of len 8 + 2 of len 24 (random tokens)."""
+    rng = np.random.RandomState(seed)
+    reqs, rid = [], 0
+    for part in spec.split(","):
+        ln, cnt = (int(v) for v in part.strip().split("x"))
+        for _ in range(cnt):
+            reqs.append(Request(
+                rid=rid, max_new=max_new,
+                prompt=rng.randint(1, vocab, (ln,)).tolist()))
+            rid += 1
+    return reqs
+
+
+def _trace_requests(path: str, max_new: int, vocab: int):
+    rng = np.random.RandomState(0)
+    reqs = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            row = json.loads(line)
+            prompt = row.get("prompt")
+            if prompt is None:
+                prompt = rng.randint(
+                    1, vocab, (int(row["prompt_len"]),)).tolist()
+            reqs.append(Request(rid=int(row.get("id", i)), prompt=prompt,
+                                max_new=int(row.get("max_new", max_new))))
+    return reqs
+
+
+def build_engine(model, params, args):
+    if args.engine == "paged":
+        return PagedEngine(model, params, max_slots=args.max_slots,
+                           block_size=args.block_size,
+                           max_batch_tokens=args.max_batch_tokens,
+                           prefill_chunk=args.prefill_chunk)
+    return LoopEngine(model, params, prefill_chunk=args.prefill_chunk)
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="minitron-8b")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--engine", choices=("loop", "paged"), default="loop")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--prompt-mix", default=None, metavar="LxN,...",
+                    help='mixed prompt lengths, e.g. "8x4,24x2"')
+    ap.add_argument("--trace", default=None, metavar="JSONL",
+                    help="request trace: rows with id/prompt_len|prompt/"
+                         "max_new")
+    ap.add_argument("--tokens", type=int, default=16,
+                    help="max_new per request (trace rows may override)")
+    ap.add_argument("--max-batch-tokens", type=int, default=0,
+                    help="paged: in-flight sum(prompt+max_new) budget "
+                         "(0 = unbounded)")
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="chunked-prefill width (loop: 0 = per-token)")
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--metrics-out", default=None, metavar="JSONL")
     ap.add_argument("--profile", default=None, metavar="DIR",
-                    help="wrap decoding in jax.profiler.trace(DIR) with "
-                         "named prefill/decode regions")
-    args = ap.parse_args()
+                    help="wrap serving in jax.profiler.trace(DIR)")
+    args = ap.parse_args(argv)
 
     cfg = serving_config(args.arch)
     if args.reduced:
@@ -69,21 +144,41 @@ def main():
         # files the trainer's --checkpoint writes (params subtree sliced)
         params = restore_params(args.checkpoint, params)
         print(f"restored {args.checkpoint}")
-    rng = np.random.RandomState(0)
-    prompts = jnp.asarray(
-        rng.randint(1, cfg.vocab_size, (args.batch, args.prompt_len)),
-        jnp.int32)
-    # obs.timing.sync_time: perf_counter + block_until_ready on the
-    # decoded tokens — the seed's time.time() span closed while the
-    # final decode steps were still in flight, inflating tok/s
+
+    if args.trace:
+        reqs = _trace_requests(args.trace, args.tokens, cfg.vocab_size)
+    elif args.prompt_mix:
+        reqs = _mixture_requests(args.prompt_mix, args.tokens,
+                                 cfg.vocab_size)
+    else:
+        reqs = _mixture_requests(f"{args.prompt_len}x{args.batch}",
+                                 args.tokens, cfg.vocab_size)
+
+    engine = build_engine(model, params, args)
     with profile_trace(args.profile):
-        dt, out = sync_time(batched_decode, model, params, prompts,
-                            args.tokens,
-                            args.prompt_len + args.tokens + 1)
-    n_new = args.batch * args.tokens
-    print(f"decoded {n_new} tokens in {dt:.2f}s "
-          f"({n_new / dt:.1f} tok/s on CPU)")
-    print("sample:", np.asarray(out[0])[:24].tolist())
+        dt, results = sync_time(engine.run, reqs)
+    summary = engine.last_summary
+
+    if args.metrics_out:
+        from repro.obs.log import MetricsLogger
+        with MetricsLogger(args.metrics_out) as log:
+            log.header(extra={"serve": {
+                "arch": args.arch, "engine": args.engine,
+                "requests": len(reqs),
+                "max_batch_tokens": args.max_batch_tokens,
+                "max_slots": args.max_slots,
+                "block_size": args.block_size,
+                "prefill_chunk": args.prefill_chunk}})
+            for r in results:
+                log.serve(r)
+            log.serve_summary(summary)
+        print(f"wrote {args.metrics_out}")
+
+    print(f"engine={args.engine} served {summary['requests']} requests, "
+          f"{summary['new_tokens']} new tokens in {dt:.2f}s "
+          f"({summary['tokens_per_s']} tok/s, p50 {summary['p50_ms']}ms "
+          f"p95 {summary['p95_ms']}ms p99 {summary['p99_ms']}ms)")
+    print("sample:", results[0]["tokens"][:24])
 
 
 if __name__ == "__main__":

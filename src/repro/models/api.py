@@ -35,7 +35,15 @@ class Model:
     forward: Callable[[Any, Any], Any]
     decode_step: Callable[..., Any] | None
     init_decode_cache: Callable[..., Any] | None
-    prefill: Callable[[Any, Any], Any] | None = None
+    #: last-position logits over a full padded batch (dry-run costing)
+    prefill_logits: Callable[[Any, Any], Any] | None = None
+    #: chunked prefill(params, tokens, positions, cache) -> (logits, cache);
+    #: bit-identical to looping decode_step (None = per-token only family)
+    prefill: Callable[..., Any] | None = None
+    #: paged-KV serving surface (attention families only)
+    init_paged_pool: Callable[..., Any] | None = None
+    decode_step_paged: Callable[..., Any] | None = None
+    prefill_paged: Callable[..., Any] | None = None
 
     def fes_mask(self, params):
         """True leaves = trainable under FES (the classifier omega^c)."""
@@ -65,8 +73,13 @@ def build_model(cfg: ModelConfig) -> Model:
                 p, cfg, tok, pos, cache),
             init_decode_cache=lambda p, frame_emb, max_len: encdec.init_decode_cache(
                 p, cfg, frame_emb, max_len),
-            prefill=lambda p, b: encdec.prefill(p, cfg, b),
+            prefill_logits=lambda p, b: encdec.prefill_logits(p, cfg, b),
+            prefill=lambda p, toks, pos, cache: encdec.prefill(
+                p, cfg, toks, pos, cache),
         )
+    # ssm/hybrid decode through recurrent state, not a KV ring: chunked
+    # prefill and the paged pool only apply to the attention families.
+    attn_family = cfg.family in ("dense", "moe", "vlm")
     return Model(
         cfg=cfg,
         init=lambda key: transformer.init_params(cfg, key),
@@ -76,7 +89,19 @@ def build_model(cfg: ModelConfig) -> Model:
             p, cfg, tok, pos, cache),
         init_decode_cache=lambda p, batch, max_len: transformer.init_decode_cache(
             cfg, batch, max_len),
-        prefill=lambda p, b: transformer.prefill(p, cfg, b),
+        prefill_logits=lambda p, b: transformer.prefill_logits(p, cfg, b),
+        prefill=(lambda p, toks, pos, cache: transformer.prefill(
+            p, cfg, toks, pos, cache)) if attn_family else None,
+        init_paged_pool=(lambda nb, bs: transformer.init_paged_pool(
+            cfg, nb, bs)) if attn_family else None,
+        decode_step_paged=(lambda p, tok, pos, pool, table, lw:
+                           transformer.decode_step_paged(
+                               p, cfg, tok, pos, pool, table, lw))
+        if attn_family else None,
+        prefill_paged=(lambda p, toks, pos, pool, table, lw:
+                       transformer.prefill_paged(
+                           p, cfg, toks, pos, pool, table, lw))
+        if attn_family else None,
     )
 
 

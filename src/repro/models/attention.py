@@ -198,17 +198,253 @@ def attention_decode(p, cfg, x, cache, position):
 
 
 def cross_attention_decode(p, cfg, x, enc_k, enc_v):
-    """Decode-time cross-attention against precomputed encoder K/V.
+    """Cross-attention against precomputed encoder K/V.
 
     enc_k/enc_v: (B, S_enc, KH, hd) — computed once at the start of decode.
+    x: (B, S, d) — S = 1 at decode time, a whole prompt chunk at prefill.
     """
     hd = cfg.resolved_head_dim
     n_rep = cfg.num_heads // cfg.num_kv_heads
-    B = x.shape[0]
+    B, S, _ = x.shape
     q = _split_heads(dense(p["wq"], x), cfg.num_heads, hd)
     kk = _repeat_kv(enc_k, n_rep).astype(jnp.float32)
     vv = _repeat_kv(enc_v, n_rep).astype(jnp.float32)
     s = jnp.einsum("bqhd,bkhd->bhqk", (q * hd**-0.5).astype(jnp.float32), kk)
     a = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", a, vv).astype(x.dtype)
-    return dense(p["wo"], out.reshape(B, 1, cfg.num_heads * hd))
+    return dense(p["wo"], out.reshape(B, S, cfg.num_heads * hd))
+
+
+# ----------------------------------------------------- chunked prefill -----
+
+#: pad sentinel on the query/position axis of a prefill chunk: rows with
+#: position >= PAD_FLOOR are padding — they never enter the cache and
+#: their outputs are garbage the caller must drop (same convention as
+#: chunked_attention's padded KV slots).
+PAD_FLOOR = 2**29
+PAD_POS = 2**30
+
+
+def _chunk_slots(positions, ring_len):
+    """Cache slots for one prefill chunk: consecutive from the chunk's
+    FIRST position (which is always real), so pad rows land on distinct
+    no-op slots instead of `PAD_POS % ring_len` colliding with a real
+    write. Requires chunk <= ring_len (engine contract)."""
+    c = positions.shape[1]
+    return ((positions[:, :1] + jnp.arange(c, dtype=jnp.int32))
+            % ring_len).astype(jnp.int32)
+
+
+def attention_prefill(p, cfg, x, cache, positions):
+    """Blockwise prefill of one prompt chunk against the decode cache.
+
+    x: (B, c, d); positions: (B, c) absolute, consecutive from the
+    chunk's first position; pad rows carry position >= PAD_FLOOR.
+
+    BIT-IDENTITY CONTRACT (gated in tests/test_serve_plane.py): logits
+    and cache leaves match the per-token ``attention_decode`` loop
+    bitwise.
+      * linear cache (window == 0): the whole chunk's K/V is written
+        first; slots at future positions are masked to NEG_INF, whose
+        softmax weight is exactly 0.0, so every query row reproduces
+        the decode-time score vector elementwise.
+      * ring cache (window > 0): a batched write evicts history that
+        earlier in-chunk queries still need, so scores/values are
+        SELECTED per query between the pre-write and post-write cache
+        states — exactly the ring state the per-token path sees at each
+        position. Transient memory is O(c * ring * H * hd) — the
+        blockwise-prefill memory bound; requires c <= ring length.
+    """
+    hd = cfg.resolved_head_dim
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    B, c, _ = x.shape
+    q = _split_heads(dense(p["wq"], x), cfg.num_heads, hd)
+    k = _split_heads(dense(p["wk"], x), cfg.num_kv_heads, hd)
+    v = _split_heads(dense(p["wv"], x), cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    L = cache["k"].shape[1]
+    slots = _chunk_slots(positions, L)
+    bidx = jnp.arange(B)[:, None]
+    real = positions < PAD_FLOOR
+    # pad rows write their slot's CURRENT entry back (a no-op write);
+    # in-chunk slots are distinct, so no real write is clobbered
+    k_w = jnp.where(real[..., None, None], k, cache["k"][bidx, slots])
+    v_w = jnp.where(real[..., None, None], v, cache["v"][bidx, slots])
+    p_w = jnp.where(real, positions, cache["pos"][bidx, slots])
+    new = {"k": cache["k"].at[bidx, slots].set(k_w),
+           "v": cache["v"].at[bidx, slots].set(v_w),
+           "pos": cache["pos"].at[bidx, slots].set(p_w)}
+
+    qf = (q * hd**-0.5).astype(jnp.float32)
+    kk = _repeat_kv(new["k"], n_rep).astype(jnp.float32)
+    vv = _repeat_kv(new["v"], n_rep).astype(jnp.float32)
+    if not cfg.sliding_window:
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kk)
+        mask = jnp.logical_and(new["pos"][:, None, :] >= 0,
+                               new["pos"][:, None, :] <= positions[..., None])
+        s = jnp.where(mask[:, None], s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", a, vv).astype(x.dtype)
+    else:
+        kk_old = _repeat_kv(cache["k"], n_rep).astype(jnp.float32)
+        vv_old = _repeat_kv(cache["v"], n_rep).astype(jnp.float32)
+        s_new = jnp.einsum("bqhd,bkhd->bhqk", qf, kk)
+        s_old = jnp.einsum("bqhd,bkhd->bhqk", qf, kk_old)
+        # written[t, s]: slot s's in-chunk write happened at position <= t
+        # (untouched slots keep new == old, so either branch is fine)
+        written = jnp.logical_and(
+            new["pos"][:, None, :] != cache["pos"][:, None, :],
+            new["pos"][:, None, :] <= positions[..., None])
+        pos_eff = jnp.where(written, new["pos"][:, None, :],
+                            cache["pos"][:, None, :])
+        s = jnp.where(written[:, None], s_new, s_old)
+        mask = jnp.logical_and(pos_eff >= 0, pos_eff <= positions[..., None])
+        mask = jnp.logical_and(
+            mask, pos_eff > positions[..., None] - cfg.sliding_window)
+        s = jnp.where(mask[:, None], s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1)
+        v_eff = jnp.where(written[..., None, None],
+                          vv[:, None], vv_old[:, None])
+        out = jnp.einsum("bhqk,bqkhd->bqhd", a, v_eff).astype(x.dtype)
+    out = out.reshape(B, c, cfg.num_heads * hd)
+    return dense(p["wo"], out), new
+
+
+# ----------------------------------------------------------- paged KV ------
+
+def paged_view(pool, table):
+    """Dense per-request view of a block pool.
+
+    pool: {"k"/"v": (nb, bs, KH, hd), "pos": (nb, bs)}; table: (B, mb)
+    int32 physical block ids per request (0 = the reserved null block).
+    Returns (k, v, pos) shaped (B, mb*bs, ...) — the same layout as a
+    dense linear/ring cache of length mb*bs, so the attention math (and
+    its numerics) is shared with the dense-cache paths.
+    """
+    nb, bs = pool["pos"].shape
+    blk = jnp.clip(table, 0, nb - 1)
+    k = pool["k"][blk]                      # (B, mb, bs, KH, hd)
+    v = pool["v"][blk]
+    pos = jnp.where((table > 0)[..., None], pool["pos"][blk], -1)
+    B, mb = table.shape
+    return (k.reshape(B, mb * bs, *k.shape[3:]),
+            v.reshape(B, mb * bs, *v.shape[3:]),
+            pos.reshape(B, mb * bs))
+
+
+def _paged_write(pool, table, slots, k, v, pos):
+    """Scatter per-request logical ring slots into the pool.
+
+    slots: (B, c) logical slots; k/v: (B, c, KH, hd); pos: (B, c).
+    Requests own disjoint blocks, so cross-request writes never collide;
+    slots within a request's chunk are distinct by the _chunk_slots
+    contract. Rows whose table entry is 0 land in the null block.
+    """
+    nb, bs = pool["pos"].shape
+    blk_i = slots // bs
+    phys = jnp.clip(jnp.take_along_axis(table, blk_i, axis=1), 0, nb - 1)
+    off = slots % bs
+    return {"k": pool["k"].at[phys, off].set(k),
+            "v": pool["v"].at[phys, off].set(v),
+            "pos": pool["pos"].at[phys, off].set(pos)}
+
+
+def attention_decode_paged(p, cfg, x, pool, table, ring_len, position):
+    """One-token decode against the shared block pool.
+
+    x: (B, 1, d); table: (B, mb); ring_len: (B,) per-request logical
+    ring modulus (min(max_len, window) for SWA, the request's max_len
+    otherwise); position: (B,) absolute. Same math as
+    ``attention_decode`` on the gathered dense view.
+    """
+    hd = cfg.resolved_head_dim
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    B = x.shape[0]
+    q = _split_heads(dense(p["wq"], x), cfg.num_heads, hd)
+    k = _split_heads(dense(p["wk"], x), cfg.num_kv_heads, hd)
+    v = _split_heads(dense(p["wv"], x), cfg.num_kv_heads, hd)
+    q = apply_rope(q, position[:, None], cfg.rope_theta)
+    k = apply_rope(k, position[:, None], cfg.rope_theta)
+
+    slots = (position % ring_len).astype(jnp.int32)[:, None]
+    pool = _paged_write(pool, table, slots, k, v, position[:, None])
+
+    kk, vv, kpos = paged_view(pool, table)
+    kk = _repeat_kv(kk, n_rep).astype(jnp.float32)
+    vv = _repeat_kv(vv, n_rep).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", (q * hd**-0.5).astype(jnp.float32), kk)
+    mask = jnp.logical_and(kpos >= 0, kpos <= position[:, None])
+    if cfg.sliding_window:
+        mask = jnp.logical_and(
+            mask, kpos > position[:, None] - cfg.sliding_window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", a, vv).astype(x.dtype)
+    out = out.reshape(B, 1, cfg.num_heads * hd)
+    return dense(p["wo"], out), pool
+
+
+def attention_prefill_paged(p, cfg, x, pool, table, ring_len, positions):
+    """Blockwise prefill of one prompt chunk into the shared block pool —
+    ``attention_prefill`` with the cache axes living behind a block
+    table. Same pad-sentinel / selection semantics; requires
+    chunk <= min(ring_len)."""
+    hd = cfg.resolved_head_dim
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    B, c, _ = x.shape
+    q = _split_heads(dense(p["wq"], x), cfg.num_heads, hd)
+    k = _split_heads(dense(p["wk"], x), cfg.num_kv_heads, hd)
+    v = _split_heads(dense(p["wv"], x), cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    nb, bs = pool["pos"].shape
+    slots = ((positions[:, :1] + jnp.arange(c, dtype=jnp.int32))
+             % ring_len[:, None]).astype(jnp.int32)
+    blk_i = slots // bs
+    phys = jnp.clip(jnp.take_along_axis(table, blk_i, axis=1), 0, nb - 1)
+    off = slots % bs
+    real = positions < PAD_FLOOR
+    k_w = jnp.where(real[..., None, None], k, pool["k"][phys, off])
+    v_w = jnp.where(real[..., None, None], v, pool["v"][phys, off])
+    p_w = jnp.where(real, positions, pool["pos"][phys, off])
+
+    old_k, old_v, old_pos = paged_view(pool, table)
+    pool = {"k": pool["k"].at[phys, off].set(k_w),
+            "v": pool["v"].at[phys, off].set(v_w),
+            "pos": pool["pos"].at[phys, off].set(p_w)}
+    new_k, new_v, new_pos = paged_view(pool, table)
+
+    qf = (q * hd**-0.5).astype(jnp.float32)
+    kk = _repeat_kv(new_k, n_rep).astype(jnp.float32)
+    vv = _repeat_kv(new_v, n_rep).astype(jnp.float32)
+    if not cfg.sliding_window:
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kk)
+        mask = jnp.logical_and(new_pos[:, None, :] >= 0,
+                               new_pos[:, None, :] <= positions[..., None])
+        s = jnp.where(mask[:, None], s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", a, vv).astype(x.dtype)
+    else:
+        kk_old = _repeat_kv(old_k, n_rep).astype(jnp.float32)
+        vv_old = _repeat_kv(old_v, n_rep).astype(jnp.float32)
+        s_new = jnp.einsum("bqhd,bkhd->bhqk", qf, kk)
+        s_old = jnp.einsum("bqhd,bkhd->bhqk", qf, kk_old)
+        written = jnp.logical_and(
+            new_pos[:, None, :] != old_pos[:, None, :],
+            new_pos[:, None, :] <= positions[..., None])
+        pos_eff = jnp.where(written, new_pos[:, None, :],
+                            old_pos[:, None, :])
+        s = jnp.where(written[:, None], s_new, s_old)
+        mask = jnp.logical_and(pos_eff >= 0, pos_eff <= positions[..., None])
+        mask = jnp.logical_and(
+            mask, pos_eff > positions[..., None] - cfg.sliding_window)
+        s = jnp.where(mask[:, None], s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1)
+        v_eff = jnp.where(written[..., None, None],
+                          vv[:, None], vv_old[:, None])
+        out = jnp.einsum("bhqk,bqkhd->bqhd", a, v_eff).astype(x.dtype)
+    out = out.reshape(B, c, cfg.num_heads * hd)
+    return dense(p["wo"], out), pool

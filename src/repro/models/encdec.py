@@ -136,7 +136,7 @@ def loss_fn(params, cfg, batch):
                                  unroll=cfg.unroll_chunks)
 
 
-def prefill(params, cfg, batch):
+def prefill_logits(params, cfg, batch):
     x = hidden_states(params, cfg, batch)
     return dense(params["lm_head"], x[:, -1, :])
 
@@ -202,4 +202,40 @@ def decode_step(params, cfg, token, position, cache):
                                     cache["tail_self"], cache["tail_cross"])
     x = rmsnorm(params["final_norm"], x)
     logits = dense(params["lm_head"], x)[:, 0]
+    return logits, dict(cache, body_self=body_self, tail_self=tail_self)
+
+
+# ---------------------------------------------------- chunked prefill ------
+
+def _dec_scan_prefill(stacked, cfg, x, positions, self_c, cross_c):
+    def body(x, inp):
+        p, sc, cc = inp
+        h, sc = attn.attention_prefill(p["self_attn"], cfg,
+                                       rmsnorm(p["ln1"], x), sc, positions)
+        x = x + h
+        ck, cv = cc
+        h = attn.cross_attention_decode(p["cross_attn"], cfg,
+                                        rmsnorm(p["ln_x"], x), ck, cv)
+        x = x + h
+        x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x))
+        return x, sc
+
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    x, self_c = jax.lax.scan(body, x, (stacked, self_c, cross_c),
+                             unroll=n if cfg.unroll_layers else 1)
+    return x, self_c
+
+
+def prefill(params, cfg, tokens, positions, cache):
+    """Chunked decoder prefill against the cached decode state (self-KV
+    rings written blockwise; cross-KV read batched). tokens/positions:
+    (B, c); pad rows carry positions >= attn.PAD_FLOOR. Returns (logits
+    (B, c, V), cache) bit-identical to the per-token decode loop."""
+    x = embedding(params["embed"], tokens)
+    x, body_self = _dec_scan_prefill(params["body"], cfg, x, positions,
+                                     cache["body_self"], cache["body_cross"])
+    x, tail_self = _dec_scan_prefill(params["tail"], cfg, x, positions,
+                                     cache["tail_self"], cache["tail_cross"])
+    x = rmsnorm(params["final_norm"], x)
+    logits = dense(params["lm_head"], x)
     return logits, dict(cache, body_self=body_self, tail_self=tail_self)

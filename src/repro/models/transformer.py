@@ -206,9 +206,10 @@ def loss_fn(params, cfg, batch):
     return loss + 0.01 * aux
 
 
-def prefill(params, cfg, batch):
-    """Prefill: last-position logits only (the realistic serving output;
-    full (B, S, V) logits are never formed)."""
+def prefill_logits(params, cfg, batch):
+    """Full-sequence prefill, last-position logits only (dry-run costing;
+    full (B, S, V) logits are never formed). The cache-writing chunked
+    prefill for serving is ``prefill`` below."""
     x, _ = hidden_states(params, cfg, batch)
     return dense(params["lm_head"], x[:, -1, :])
 
@@ -331,3 +332,131 @@ def decode_step(params, cfg, token, position, cache):
     if shared_c is not None:
         new_cache["shared"] = shared_c
     return logits, new_cache
+
+
+# ---------------------------------------------------- chunked prefill ------
+
+def block_prefill(p, cfg, x, cache, positions):
+    """One prompt chunk through one block. x: (B, c, d). Attention-family
+    blocks only (ssm/hybrid keep the per-token path); the FFN half reuses
+    the decode-path ops (moe_apply_dense / mlp) so the residual stream
+    matches ``block_decode`` bitwise row-for-row."""
+    h, cache = attn.attention_prefill(p["attn"], cfg, rmsnorm(p["ln1"], x),
+                                      cache, positions)
+    x = x + h
+    if cfg.num_experts:
+        h, _ = moe.moe_apply_dense(p["moe"], cfg, rmsnorm(p["ln2"], x))
+    else:
+        h = mlp(p["mlp"], rmsnorm(p["ln2"], x))
+    return x + h, cache
+
+
+def _scan_blocks_prefill(stacked, cfg, x, cache, positions):
+    if stacked is None:
+        return x, cache
+
+    def body(x, inp):
+        layer_p, layer_c = inp
+        x, layer_c = block_prefill(layer_p, cfg, x, layer_c, positions)
+        return x, layer_c
+
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    x, cache = jax.lax.scan(body, x, (stacked, cache),
+                            unroll=n if cfg.unroll_layers else 1)
+    return x, cache
+
+
+def prefill(params, cfg, tokens, positions, cache):
+    """Jitted chunked prefill: one dispatch per prompt CHUNK instead of
+    per token. tokens/positions: (B, c); pad rows carry positions >=
+    attn.PAD_FLOOR and never enter the cache. Returns (logits (B, c, V),
+    cache) — bit-identical to looping ``decode_step`` over the chunk
+    (gated in tests/test_serve_plane.py)."""
+    x = embedding(params["embed"], tokens)
+    x, body_c = _scan_blocks_prefill(params["body"], cfg, x,
+                                     cache["body"], positions)
+    x, tail_c = _scan_blocks_prefill(params["tail"], cfg, x,
+                                     cache["tail"], positions)
+    x = rmsnorm(params["final_norm"], x)
+    logits = dense(params["lm_head"], x)
+    return logits, {"body": body_c, "tail": tail_c}
+
+
+# --------------------------------------------------------- paged cache -----
+
+def init_paged_pool(cfg, num_blocks, block_size, dtype=None):
+    """Block pool shared by all in-flight requests: per layer-group leaves
+    (n_layers, num_blocks, block_size, KH, hd) + pos (n_layers, nb, bs).
+    Block 0 is reserved as the null/trash block (block-table entry 0 =
+    unmapped)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    n_tail = min(cfg.fes_tail_layers, cfg.num_layers)
+    n_body = cfg.num_layers - n_tail
+
+    def group(n):
+        if n == 0:
+            return None
+        return {"k": jnp.zeros((n, num_blocks, block_size,
+                                cfg.num_kv_heads, hd), dtype),
+                "v": jnp.zeros((n, num_blocks, block_size,
+                                cfg.num_kv_heads, hd), dtype),
+                "pos": jnp.full((n, num_blocks, block_size), -1, jnp.int32)}
+
+    return {"body": group(n_body), "tail": group(n_tail)}
+
+
+def _scan_blocks_paged(stacked, cfg, x, pool, table, ring_len, positions,
+                       prefill_chunk):
+    if stacked is None:
+        return x, pool
+
+    def body(x, inp):
+        layer_p, layer_pool = inp
+        if prefill_chunk:
+            h, layer_pool = attn.attention_prefill_paged(
+                layer_p["attn"], cfg, rmsnorm(layer_p["ln1"], x),
+                layer_pool, table, ring_len, positions)
+        else:
+            h, layer_pool = attn.attention_decode_paged(
+                layer_p["attn"], cfg, rmsnorm(layer_p["ln1"], x),
+                layer_pool, table, ring_len, positions)
+        x = x + h
+        if cfg.num_experts:
+            h, _ = moe.moe_apply_dense(layer_p["moe"], cfg,
+                                       rmsnorm(layer_p["ln2"], x))
+        else:
+            h = mlp(layer_p["mlp"], rmsnorm(layer_p["ln2"], x))
+        return x + h, layer_pool
+
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    x, pool = jax.lax.scan(body, x, (stacked, pool),
+                           unroll=n if cfg.unroll_layers else 1)
+    return x, pool
+
+
+def decode_step_paged(params, cfg, token, position, pool, table, ring_len):
+    """One decode step against the shared block pool. token/position: (B,);
+    table: (B, mb) block ids (0 = unmapped); ring_len: (B,) logical ring
+    modulus per request. Returns (logits (B, V), pool)."""
+    x = embedding(params["embed"], token[:, None])
+    x, body_p = _scan_blocks_paged(params["body"], cfg, x, pool["body"],
+                                   table, ring_len, position, False)
+    x, tail_p = _scan_blocks_paged(params["tail"], cfg, x, pool["tail"],
+                                   table, ring_len, position, False)
+    x = rmsnorm(params["final_norm"], x)
+    logits = dense(params["lm_head"], x)[:, 0]
+    return logits, {"body": body_p, "tail": tail_p}
+
+
+def prefill_paged(params, cfg, tokens, positions, pool, table, ring_len):
+    """Chunked prefill against the shared block pool. tokens/positions:
+    (B, c). Returns (logits (B, c, V), pool)."""
+    x = embedding(params["embed"], tokens)
+    x, body_p = _scan_blocks_paged(params["body"], cfg, x, pool["body"],
+                                   table, ring_len, positions, True)
+    x, tail_p = _scan_blocks_paged(params["tail"], cfg, x, pool["tail"],
+                                   table, ring_len, positions, True)
+    x = rmsnorm(params["final_norm"], x)
+    logits = dense(params["lm_head"], x)
+    return logits, {"body": body_p, "tail": tail_p}

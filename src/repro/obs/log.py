@@ -2,7 +2,7 @@
 
 One run = one JSONL file (``--metrics-out``):
 
-  {"kind": "header", "schema": 1, "provenance": {...}, "config": {...},
+  {"kind": "header", "schema": 2, "provenance": {...}, "config": {...},
    "payload_bytes": N, "resumed_at": t | null}
   {"kind": "round", "t": 0, "loss": ..., "n_on_time": ...,
    "n_limited": ..., "n_delayed": ..., "mean_delay": ...,
@@ -11,6 +11,10 @@ One run = one JSONL file (``--metrics-out``):
   {"kind": "eval", "t": 5, "test_acc": ..., "test_loss": ...}
   {"kind": "phases", "phases": {"stage": {"seconds": ..., "calls": ...},
    "compile": ..., "scan_dispatch": ..., "eval": ..., "checkpoint": ...}}
+  {"kind": "serve", "id": 0, "new_tokens": 16, "queue_s": ...,
+   "prefill_s": ..., "decode_s": ..., "total_s": ...}  # one per request
+  {"kind": "serve_summary", "requests": N, "new_tokens": ...,
+   "tokens_per_s": ..., "p50_ms": ..., "p95_ms": ..., "p99_ms": ...}
 
 Round rows are pure functions of the round they describe (absolute
 ``t``, device-computed values), so a resumed run's file is bit-identical
@@ -29,7 +33,10 @@ import json
 
 import numpy as np
 
-SCHEMA_VERSION = 1
+#: v2 adds the serving-plane rows ("serve", "serve_summary"); v1 files
+#: (training/eval telemetry only) remain readable
+SCHEMA_VERSION = 2
+SUPPORTED_SCHEMAS = (1, 2)
 
 #: required keys per row kind (extended round metrics are optional —
 #: a base run logs only loss/participation)
@@ -38,8 +45,13 @@ REQUIRED = {
     "round": ("t", "loss", "n_on_time"),
     "eval": ("t", "test_acc", "test_loss"),
     "phases": ("phases",),
+    "serve": ("id", "new_tokens"),
+    "serve_summary": ("requests", "tokens_per_s"),
 }
 KINDS = tuple(REQUIRED)
+
+#: per-request latency series a serve row may carry (all seconds)
+SERVE_LATENCY_KEYS = ("queue_s", "prefill_s", "decode_s", "total_s")
 
 
 def _py(x):
@@ -112,6 +124,22 @@ class MetricsLogger:
         summary = times.summary() if hasattr(times, "summary") else times
         self._emit({"kind": "phases", "phases": summary})
 
+    def serve(self, result: dict) -> None:
+        """One per-request serving row (engine result dict: id,
+        new_tokens, queue_s/prefill_s/decode_s/total_s). The decoded
+        token ids are NOT logged — telemetry, not transcripts."""
+        row = {"kind": "serve", "id": int(result["id"]),
+               "new_tokens": int(result["new_tokens"])}
+        for k in SERVE_LATENCY_KEYS:
+            if k in result:
+                row[k] = round(float(result[k]), 6)
+        self._emit(row)
+
+    def serve_summary(self, summary: dict) -> None:
+        """The one-per-run aggregate: tokens/sec + latency percentiles
+        (engine ``last_summary`` dict)."""
+        self._emit({"kind": "serve_summary", **summary})
+
     def close(self) -> None:
         if self._f is not None:
             self._f.close()
@@ -154,9 +182,9 @@ def validate_rows(rows: list[dict]) -> list[str]:
     if rows[0].get("kind") != "header":
         errs.append("first row must be kind=header, got "
                     f"{rows[0].get('kind')!r}")
-    elif rows[0].get("schema") != SCHEMA_VERSION:
+    elif rows[0].get("schema") not in SUPPORTED_SCHEMAS:
         errs.append(f"unsupported schema {rows[0].get('schema')!r} "
-                    f"(reader supports {SCHEMA_VERSION})")
+                    f"(reader supports {SUPPORTED_SCHEMAS})")
     prev_t = None
     for i, row in enumerate(rows):
         kind = row.get("kind")
@@ -192,4 +220,17 @@ def validate_rows(rows: list[dict]) -> list[str]:
             if prev_t is not None and row["t"] > prev_t:
                 errs.append(f"row {i}: eval at t={row['t']} beyond last "
                             f"logged round t={prev_t}")
+        if kind == "serve":
+            for k in ("id", "new_tokens"):
+                if not isinstance(row[k], int):
+                    errs.append(f"row {i}: {k} must be int")
+            for k in SERVE_LATENCY_KEYS:
+                if k in row and not isinstance(row[k], (int, float)):
+                    errs.append(f"row {i}: {k} must be numeric")
+                elif isinstance(row.get(k), (int, float)) and row[k] < 0:
+                    errs.append(f"row {i}: {k} must be >= 0")
+        if kind == "serve_summary":
+            for k in ("requests", "new_tokens", "tokens_per_s"):
+                if k in row and not isinstance(row[k], (int, float)):
+                    errs.append(f"row {i}: {k} must be numeric")
     return errs

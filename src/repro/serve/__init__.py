@@ -1,0 +1,8 @@
+"""Production serving plane: paged KV cache, jitted chunked prefill,
+continuous batching (see README "Serving engine")."""
+from repro.serve.engine import LoopEngine, PagedEngine, latency_percentiles
+from repro.serve.kv_pool import KVPool
+from repro.serve.scheduler import Request, Scheduler
+
+__all__ = ["KVPool", "LoopEngine", "PagedEngine", "Request", "Scheduler",
+           "latency_percentiles"]

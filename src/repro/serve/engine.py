@@ -1,0 +1,350 @@
+"""Serving engines: per-token loop (fixed) and paged continuous batching.
+
+``LoopEngine`` is the seed launcher's lockstep decode made correct for
+variable-length prompts: every row feeds its OWN prompt token while it
+still has prompt left and its last sampled token afterwards, so padded
+positions never enter the KV cache. With ``prefill_chunk > 0`` (and a
+model exposing ``prefill``) the shared prompt prefix [0, min_len-1) is
+prefilled in jitted chunks — one dispatch per chunk instead of per
+token — bit-identically to the per-token path.
+
+``PagedEngine`` is the production plane: requests are admitted by the
+FIFO token-budget ``Scheduler`` into fixed decode slots, their prompts
+chunk-prefilled (B=1) straight into the shared ``KVPool``, and all
+active slots decode in lockstep through one jitted
+``decode_step_paged``. Finished requests free their blocks between
+steps and the freed slot/blocks are reused by the next admission —
+continuous batching. Requests of different lengths pay for their own
+ring (ceil(ring/block_size) blocks), not the batch max.
+
+Decode runs in MULTI-STEP BURSTS: under greedy decoding every
+completion time is known in advance (len(generated) == max_new), so
+between scheduling events the engine dispatches one ``lax.scan`` of
+decode steps — argmax feedback stays on device — instead of one jit
+call per token. Burst lengths are rounded down to powers of two (capped
+at 32) so at most six scan variants ever compile. Scan-of-decode-step
+is bit-identical to the per-token loop (same contract the training
+engine's scan relies on), so bursts do not perturb the served tokens.
+
+All timings use perf_counter spans closed AFTER the host transfer of
+the step's argmax (which blocks on the step), so per-request latency
+percentiles are honest — same discipline as obs.timing.sync_time.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import PAD_POS
+from repro.serve.kv_pool import KVPool
+from repro.serve.scheduler import Request, Scheduler
+
+
+def latency_percentiles(seconds: list[float]) -> dict:
+    if not seconds:
+        return {"p50_ms": None, "p95_ms": None, "p99_ms": None}
+    a = np.asarray(seconds, np.float64) * 1e3
+    return {f"p{q}_ms": round(float(np.percentile(a, q)), 2)
+            for q in (50, 95, 99)}
+
+
+def _result(req: Request) -> dict:
+    return {
+        "id": req.rid,
+        "tokens": list(req.prompt) + [int(t) for t in req.generated],
+        "new_tokens": len(req.generated),
+        "queue_s": req.admit_t - req.submit_t,
+        "prefill_s": req.prefill_s,
+        "decode_s": req.done_t - req.admit_t - req.prefill_s,
+        "total_s": req.done_t - req.submit_t,
+    }
+
+
+def _summary(results: list[dict], wall_s: float) -> dict:
+    new = sum(r["new_tokens"] for r in results)
+    return {"requests": len(results), "new_tokens": new,
+            "wall_s": round(wall_s, 4),
+            "tokens_per_s": round(new / wall_s, 2) if wall_s > 0 else 0.0,
+            **latency_percentiles([r["total_s"] for r in results])}
+
+
+def _ring_len(cfg, max_len: int) -> int:
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window \
+        else max_len
+
+
+class LoopEngine:
+    """Lockstep decode with per-request prompt lengths (+ optional
+    jitted chunked prefill of the shared prefix)."""
+
+    def __init__(self, model, params, prefill_chunk: int = 0):
+        self.model, self.params = model, params
+        self.prefill_chunk = int(prefill_chunk) \
+            if model.prefill is not None else 0
+        self._step = jax.jit(model.decode_step)
+        self._pf = jax.jit(model.prefill) if self.prefill_chunk else None
+        self.last_summary: dict | None = None
+
+    def _init_cache(self, B: int, max_len: int):
+        model = self.model
+        if model.cfg.family == "audio":
+            fe = jnp.zeros((B, model.cfg.encoder_seq, model.cfg.d_model),
+                           jnp.dtype(model.cfg.dtype))
+            return model.init_decode_cache(self.params, fe, max_len)
+        return model.init_decode_cache(self.params, B, max_len)
+
+    def run(self, requests: list[Request]) -> list[dict]:
+        reqs = list(requests)
+        B = len(reqs)
+        t_start = time.perf_counter()
+        for r in reqs:
+            r.submit_t = r.admit_t = t_start       # all admitted at once
+            r.generated = []
+        lens = [r.prompt_len for r in reqs]
+        max_len = max(r.prompt_len + r.max_new for r in reqs) + 1
+        cache = self._init_cache(B, max_len)
+        params = self.params
+
+        t0 = 0
+        if self.prefill_chunk:
+            # jitted chunked prefill of the SHARED prefix [0, min_len-1);
+            # per-row prompt tails + generation stay in the token loop
+            c = min(self.prefill_chunk, _ring_len(self.model.cfg, max_len))
+            end = min(lens) - 1
+            t_pf = time.perf_counter()
+            while t0 < end:
+                n = min(c, end - t0)
+                toks = np.zeros((B, c), np.int32)
+                poss = np.full((B, c), PAD_POS, np.int32)
+                for b, r in enumerate(reqs):
+                    toks[b, :n] = r.prompt[t0:t0 + n]
+                poss[:, :n] = np.arange(t0, t0 + n, dtype=np.int32)
+                logits, cache = self._pf(params, jnp.asarray(toks),
+                                         jnp.asarray(poss), cache)
+                t0 += n
+            jax.block_until_ready(cache)
+            for r in reqs:
+                r.prefill_s = time.perf_counter() - t_pf
+
+        T = max(r.prompt_len + r.max_new for r in reqs) - 1
+        tok = np.zeros((B,), np.int32)
+        for t in range(t0, T):
+            for b, r in enumerate(reqs):
+                if t < lens[b]:
+                    tok[b] = r.prompt[t]
+                else:
+                    tok[b] = r.generated[min(t - lens[b],
+                                             len(r.generated) - 1)]
+            # NOTE: tok is mutated per step while prefill steps run
+            # async (no sync until a row samples) — hand each step its
+            # own copy so the CPU backend can't zero-copy-alias a
+            # buffer we are about to overwrite
+            logits, cache = self._step(params, jnp.asarray(tok.copy()),
+                                       jnp.full((B,), t, jnp.int32), cache)
+            if t < min(lens) - 1:
+                continue            # pure prefill: no row samples yet
+            args = np.asarray(jnp.argmax(logits, axis=-1))   # blocks
+            now = time.perf_counter()
+            for b, r in enumerate(reqs):
+                if t >= lens[b] - 1 and len(r.generated) < r.max_new:
+                    r.generated.append(int(args[b]))
+                    if len(r.generated) == r.max_new:
+                        r.done_t = now
+        results = [_result(r) for r in reqs]
+        self.last_summary = _summary(results, time.perf_counter() - t_start)
+        return results
+
+
+class PagedEngine:
+    """Continuous batching over a shared paged KV pool (attention
+    families only — ssm/hybrid have recurrent state, not a KV ring)."""
+
+    def __init__(self, model, params, *, max_slots: int = 4,
+                 block_size: int = 8, max_batch_tokens: int = 0,
+                 prefill_chunk: int = 8, num_blocks: int | None = None):
+        if model.prefill_paged is None:
+            raise ValueError(
+                f"family {model.cfg.family!r} has no paged serving path "
+                f"(use LoopEngine)")
+        self.model, self.params = model, params
+        self.max_slots = int(max_slots)
+        self.block_size = int(block_size)
+        self.max_batch_tokens = int(max_batch_tokens)
+        self.prefill_chunk = int(prefill_chunk)
+        self.num_blocks = num_blocks
+        # pool buffers are donated: the engine always replaces kv.pool
+        # with the returned tree, so XLA updates the blocks in place
+        # instead of copying the whole pool every dispatch
+        self._pf = jax.jit(model.prefill_paged, donate_argnums=(3,))
+        self._bursts: dict[int, object] = {}      # burst length -> jitted
+        self.last_summary: dict | None = None
+        self.scheduler: Scheduler | None = None
+        self.kv: KVPool | None = None
+
+    _MAX_BURST = 32
+
+    def _burst(self, n: int):
+        """Jitted scan of ``n`` decode steps with on-device greedy
+        feedback. Returns (sampled (n, S) int32, new pool)."""
+        if n not in self._bursts:
+            step = self.model.decode_step_paged
+
+            def fn(params, tok, pos, pool, table, lw):
+                def body(carry, _):
+                    tok, pos, pool = carry
+                    logits, pool = step(params, tok, pos, pool, table, lw)
+                    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    return (tok, pos + 1, pool), tok
+                (tok, pos, pool), toks = jax.lax.scan(
+                    body, (tok, pos, pool), None, length=n)
+                return toks, pool
+            self._bursts[n] = jax.jit(fn, donate_argnums=(3,))
+        return self._bursts[n]
+
+    def run(self, requests: list[Request]) -> list[dict]:
+        cfg = self.model.cfg
+        params = self.params
+        reqs = list(requests)
+        rings = {r.rid: _ring_len(cfg, r.prompt_len + r.max_new + 1)
+                 for r in reqs}
+        S = self.max_slots
+        bs = self.block_size
+        MB = max(-(-lw // bs) for lw in rings.values())
+        NB = self.num_blocks or 1 + S * MB
+        kv = self.kv = KVPool(self.model, NB, bs)
+        sched = self.scheduler = Scheduler(self.max_batch_tokens)
+        c = max(1, min(self.prefill_chunk, min(rings.values())))
+
+        slot_rid: list[int | None] = [None] * S
+        table = np.zeros((S, MB), np.int32)
+        lw = np.ones((S,), np.int32)
+        pos = np.zeros((S,), np.int32)
+        tok = np.zeros((S,), np.int32)
+        blocks_of: dict[int, list[int]] = {}
+        by_rid = {r.rid: r for r in reqs}
+
+        t_start = time.perf_counter()
+        for r in reqs:
+            r.submit_t = t_start
+            r.generated = []
+            sched.submit(r)
+
+        def can_place(req):
+            return (None in slot_rid
+                    and kv.can_alloc(kv.blocks_for(rings[req.rid])))
+
+        def admit_all():
+            # waves until the queue head no longer fits (a wave's own
+            # max_new==1 completions can free slots for the next wave)
+            while admit_wave():
+                pass
+
+        def admit_wave() -> bool:
+            # admit a WAVE: every head-of-queue request that fits right
+            # now, then prefill the whole wave in lockstep chunks — one
+            # dispatch per chunk for the wave, not per request
+            wave: list[tuple[int, Request]] = []
+            while True:
+                req = sched.try_admit(can_place=can_place)
+                if req is None:
+                    break
+                s = slot_rid.index(None)
+                nblk = kv.blocks_for(rings[req.rid])
+                blocks_of[req.rid] = blocks = kv.alloc(nblk)
+                slot_rid[s] = req.rid
+                sched.record_slot(req.rid, s)
+                table[s, :] = 0
+                table[s, :nblk] = blocks
+                lw[s] = rings[req.rid]
+                req.admit_t = time.perf_counter()
+                wave.append((s, req))
+            if not wave:
+                return False
+            # ---- jitted chunked prefill into the shared pool. Rows that
+            # run out of prompt before the wave's longest become all-PAD
+            # (predicated no-op writes); each row's first sampled token
+            # comes from the chunk holding its last prompt position.
+            W = len(wave)
+            slots_w = [s for s, _ in wave]
+            t_rows = jnp.asarray(table[slots_w])
+            l_rows = jnp.asarray(lw[slots_w])
+            maxP = max(r.prompt_len for _, r in wave)
+            first_tok = {}
+            for t0 in range(0, maxP, c):
+                toks = np.zeros((W, c), np.int32)
+                poss = np.full((W, c), PAD_POS, np.int32)
+                for w, (_, r) in enumerate(wave):
+                    n = min(c, r.prompt_len - t0)
+                    if n > 0:
+                        toks[w, :n] = r.prompt[t0:t0 + n]
+                        poss[w, :n] = np.arange(t0, t0 + n, dtype=np.int32)
+                logits, kv.pool = self._pf(
+                    params, jnp.asarray(toks), jnp.asarray(poss),
+                    kv.pool, t_rows, l_rows)
+                args = np.asarray(jnp.argmax(logits, axis=-1))   # blocks
+                for w, (_, r) in enumerate(wave):
+                    last = r.prompt_len - 1 - t0
+                    if 0 <= last < c:
+                        first_tok[r.rid] = int(args[w, last])
+            now = time.perf_counter()
+            for s, req in wave:
+                req.prefill_s = now - req.admit_t
+                req.generated.append(first_tok[req.rid])
+                pos[s] = req.prompt_len
+                tok[s] = first_tok[req.rid]
+                if len(req.generated) >= req.max_new:
+                    finish(s, now)
+            return True
+
+        def finish(s, now):
+            rid = slot_rid[s]
+            req = by_rid[rid]
+            req.done_t = now
+            kv.free(blocks_of.pop(rid))
+            sched.release(req)
+            slot_rid[s] = None
+            table[s, :] = 0
+            lw[s] = 1
+            pos[s] = 0
+            tok[s] = 0
+
+        results_order = [r.rid for r in reqs]
+        admit_all()
+        while any(s is not None for s in slot_rid) or sched.pending:
+            if all(s is None for s in slot_rid):
+                # nothing in flight yet the head cannot be placed: the
+                # request cannot ever fit this pool
+                req = sched.queue[0]
+                raise RuntimeError(
+                    f"request {req.rid} needs "
+                    f"{kv.blocks_for(rings[req.rid])} blocks; pool has "
+                    f"{kv.num_blocks - 1} total")
+            # steps until the next scheduling event are known exactly
+            # under greedy decoding — burst them in one scan dispatch
+            to_event = min(by_rid[rid].max_new - len(by_rid[rid].generated)
+                           for rid in slot_rid if rid is not None)
+            n = 1
+            while n * 2 <= min(to_event, self._MAX_BURST):
+                n *= 2
+            toks, kv.pool = self._burst(n)(
+                params, jnp.asarray(tok), jnp.asarray(pos),
+                kv.pool, jnp.asarray(table), jnp.asarray(lw))
+            args = np.asarray(toks)                          # blocks
+            now = time.perf_counter()
+            for s in range(S):
+                if slot_rid[s] is None:
+                    continue
+                req = by_rid[slot_rid[s]]
+                req.generated.extend(int(t) for t in args[:, s])
+                pos[s] += n
+                tok[s] = int(args[-1, s])
+                if len(req.generated) >= req.max_new:
+                    finish(s, now)
+            admit_all()
+
+        results = [_result(by_rid[rid]) for rid in results_order]
+        self.last_summary = _summary(results, time.perf_counter() - t_start)
+        return results
