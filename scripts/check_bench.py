@@ -1,21 +1,32 @@
-"""CI benchmark-regression gate.
+"""CI benchmark-regression gate, driven by scripts/bench_gates.json.
 
-Re-runs the smoke configuration of each gated benchmark and fails (exit
-1) if its fused/scan throughput ratio drops below 0.9x the committed
-``BENCH_*.json`` baseline, so a PR that quietly un-fuses the scan engine
-or the server plane cannot land green. The committed baseline is the
-JSON's ``smoke.gate`` value — the smoke-scale speedup discounted for
-shared-runner variance (~±20% on wall-clock ratios at these sizes), so
-the gate trips on real regressions (2-10x fusion losses), not jitter.
+Re-runs the smoke configuration of each benchmark registered in the
+manifest and applies its declarative checks: each check compares a
+dotted-path metric of the FRESH ``run(smoke=True)`` record against
+``factor x`` a dotted-path value of the committed ``BENCH_*.json``
+baseline —
+
+  * direction "min": fresh must stay ABOVE the scaled baseline
+    (throughput floors; a PR that quietly un-fuses the scan engine or
+    the server plane cannot land green), the default factor 0.9
+    discounting shared-runner wall-clock jitter so the gate trips on
+    real regressions (2-10x fusion losses), not noise;
+  * direction "max": fresh must stay BELOW it (resource ceilings — the
+    comm plane's bytes-on-wire: a compression regression fails CI the
+    same way a speed regression does).
 
 Fresh smoke results are written as JSON next to the baselines (or into
-``--out-dir``) for upload as workflow artifacts. On a regression the
-report includes the provenance diff (jax version, backend, device
+``--out-dir``) for upload as workflow artifacts. For EVERY failed gate
+the report includes the provenance diff (jax version, backend, device
 count, git sha — ``repro.obs.provenance``) between the committed
 baseline and the fresh run, so "what regressed" distinguishes an engine
 change from an environment change at a glance.
 
+Adding a gated benchmark is a manifest edit, not code: register the
+module + baseline + checks in ``bench_gates.json``.
+
 Usage:  PYTHONPATH=src python scripts/check_bench.py [--out-dir DIR]
+        ... check_bench.py --only comm_plane   # a single gate
 """
 from __future__ import annotations
 
@@ -27,81 +38,102 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(ROOT, "benchmarks"))
 
-FACTOR = 0.9
+MANIFEST = os.path.join(ROOT, "scripts", "bench_gates.json")
 
-#: benchmark module -> (baseline json, fresh-run metric, baseline gate key)
-GATES = {
-    "sim_engine": ("BENCH_sim_engine.json",
-                   lambda rec: rec["speedup"],
-                   lambda base: base["smoke"]["gate"]),
-    "server_plane": ("BENCH_server_plane.json",
-                     lambda rec: rec["geomean_speedup"],
-                     lambda base: base["smoke"]["gate"]),
-    "client_plane": ("BENCH_client_plane.json",
-                     lambda rec: rec["speedup"],
-                     lambda base: base["smoke"]["gate"]),
-    # scale_ratio = rounds/sec at K=1e6 over K=1e3 (~1.0 when per-round
-    # scheduling+staging is population-free); an O(K) regression in the
-    # virtual-population path drags it toward 0 and trips the gate
-    "federation_scale": ("BENCH_federation_scale.json",
-                         lambda rec: rec["scale_ratio"],
-                         lambda base: base["smoke"]["gate"]),
-    # paged continuous-batching engine vs seed per-token loop on the
-    # mixed-prompt-length mixture; a regression means chunked prefill
-    # or the decode bursts fell back to per-token dispatch
-    "serve_plane": ("BENCH_serve_plane.json",
-                    lambda rec: rec["speedup"],
-                    lambda base: base["smoke"]["gate"]),
-}
+
+def lookup(record: dict, path: str):
+    """Dotted-path lookup: 'smoke.gate' -> record['smoke']['gate']."""
+    cur = record
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(f"path {path!r} missing at {part!r}")
+        cur = cur[part]
+    return cur
+
+
+def check_one(name: str, spec: dict, default_factor: float, rec: dict,
+              baseline: dict) -> list[str]:
+    """Apply one benchmark's checks; returns failure descriptions."""
+    fails = []
+    for chk in spec["checks"]:
+        fresh = float(lookup(rec, chk["metric"]))
+        base = float(lookup(baseline, chk["against"]))
+        factor = float(chk.get("factor", default_factor))
+        bound = factor * base
+        direction = chk["direction"]
+        if direction == "min":
+            ok, rel = fresh >= bound, "floor"
+        elif direction == "max":
+            ok, rel = fresh <= bound, "ceiling"
+        else:
+            raise ValueError(f"{name}: unknown direction {direction!r}")
+        verdict = "OK" if ok else "REGRESSION"
+        print(f"{name}: {chk['metric']} {fresh:.3f} vs {rel} {bound:.3f} "
+              f"({factor:g} x baseline {chk['against']}) -> {verdict}")
+        if not ok:
+            fails.append(f"{name}.{chk['metric']} ({direction} check)")
+    return fails
+
+
+def provenance_triage(name: str, baseline: dict, rec: dict) -> None:
+    """Environment-or-code triage, printed for EVERY failed gate."""
+    from repro.obs.provenance import diff as prov_diff
+    if baseline.get("provenance") is None:
+        # baselines committed before the provenance stamp existed
+        print(f"{name}: baseline has no provenance stamp (pre-telemetry "
+              f"BENCH json); fresh env: {rec.get('provenance')}")
+        return
+    pd = prov_diff(baseline.get("provenance"), rec.get("provenance"))
+    if pd:
+        print(f"{name}: provenance diff baseline -> fresh: "
+              + "; ".join(pd))
+    else:
+        print(f"{name}: provenance identical to baseline — regression "
+              f"is in the code path, not the env")
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out-dir", default=os.path.join(ROOT, "bench-fresh"),
                     help="where fresh smoke JSONs go (workflow artifacts)")
+    ap.add_argument("--only", default=None,
+                    help="run a single gate from the manifest")
+    ap.add_argument("--manifest", default=MANIFEST)
     args = ap.parse_args()
     os.makedirs(args.out_dir, exist_ok=True)
 
+    with open(args.manifest) as f:
+        manifest = json.load(f)
+    default_factor = float(manifest.get("default_factor", 0.9))
+    gates = manifest["gates"]
+    if args.only:
+        if args.only not in gates:
+            print(f"unknown gate {args.only!r}; manifest has: "
+                  f"{sorted(gates)}")
+            return 2
+        gates = {args.only: gates[args.only]}
+
     failures = []
-    for name, (baseline_file, fresh_metric, base_gate) in GATES.items():
-        path = os.path.join(ROOT, baseline_file)
+    for name, spec in gates.items():
+        path = os.path.join(ROOT, spec["baseline"])
         with open(path) as f:
             baseline = json.load(f)
-        print(f"--- {name}: smoke run (baseline {baseline_file}) ---")
+        print(f"--- {name}: smoke run (baseline {spec['baseline']}) ---")
         mod = __import__(name)
         rec = mod.run(smoke=True)
         out = os.path.join(args.out_dir, f"BENCH_{name}_smoke.json")
         with open(out, "w") as f:
             json.dump(rec, f, indent=2)
             f.write("\n")
-        fresh = fresh_metric(rec)
-        floor = FACTOR * base_gate(baseline)
-        verdict = "OK" if fresh >= floor else "REGRESSION"
-        print(f"{name}: fresh speedup {fresh:.3f} vs floor {floor:.3f} "
-              f"(0.9 x committed gate) -> {verdict}")
-        if fresh < floor:
-            failures.append(name)
-            # environment-or-code triage: baselines committed before the
-            # provenance stamp existed just report "no baseline stamp"
-            from repro.obs.provenance import diff as prov_diff
-            pd = prov_diff(baseline.get("provenance"),
-                           rec.get("provenance"))
-            if baseline.get("provenance") is None:
-                print(f"{name}: baseline has no provenance stamp "
-                      f"(pre-telemetry BENCH json); fresh env: "
-                      f"{rec.get('provenance')}")
-            elif pd:
-                print(f"{name}: provenance diff baseline -> fresh: "
-                      + "; ".join(pd))
-            else:
-                print(f"{name}: provenance identical to baseline — "
-                      f"regression is in the code path, not the env")
+        fails = check_one(name, spec, default_factor, rec, baseline)
+        if fails:
+            failures.extend(fails)
+            provenance_triage(name, baseline, rec)
 
     if failures:
-        print(f"benchmark regression gate FAILED: {failures} — fused/scan "
-              f"throughput dropped below 0.9x the committed baseline "
-              f"(re-baseline BENCH_*.json only with a justified perf "
-              f"change)")
+        print(f"benchmark regression gate FAILED: {failures} — a gated "
+              f"metric crossed its manifest bound (re-baseline "
+              f"BENCH_*.json only with a justified perf/size change)")
         return 1
     print("benchmark regression gate passed")
     return 0

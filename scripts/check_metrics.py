@@ -13,6 +13,9 @@ Usage:  PYTHONPATH=src python scripts/check_metrics.py run.jsonl [...]
         ... check_metrics.py --require-serve serve.jsonl    # serving
         runs: per-request serve rows (with latency series) + one
         serve_summary row must be present
+        ... check_metrics.py --require-comm run.jsonl       # comm-plane
+        runs: round rows must carry the compressed-wire fields with an
+        actual compression (ratio > 1)
 """
 from __future__ import annotations
 
@@ -24,13 +27,29 @@ from repro.obs.metrics import ROUND_METRIC_KEYS
 
 
 def check(path: str, require_extended: bool = False,
-          require_serve: bool = False) -> list[str]:
+          require_serve: bool = False,
+          require_comm: bool = False) -> list[str]:
     try:
         rows = read_rows(path)
     except (OSError, ValueError) as e:
         return [str(e)]
     errs = validate_rows(rows)
     rnd = [r for r in rows if r.get("kind") == "round"]
+    if require_comm:
+        if not rnd:
+            errs.append("no round rows")
+        for k in ("bytes_on_wire_compressed", "compression_ratio"):
+            missing = sum(1 for r in rnd if k not in r)
+            if missing:
+                errs.append(f"comm series {k!r} missing from "
+                            f"{missing}/{len(rnd)} round rows")
+        uncompressed = sum(
+            1 for r in rnd
+            if isinstance(r.get("compression_ratio"), (int, float))
+            and r["compression_ratio"] <= 1.0)
+        if rnd and uncompressed == len(rnd):
+            errs.append("compression_ratio <= 1.0 on every round row — "
+                        "the comm plane is not actually compressing")
     if require_extended:
         if not rnd:
             errs.append("no round rows")
@@ -65,10 +84,15 @@ def main(argv=None) -> int:
     ap.add_argument("--require-serve", action="store_true",
                     help="fail unless per-request serve rows and one "
                          "serve_summary row are present")
+    ap.add_argument("--require-comm", action="store_true",
+                    help="fail unless round rows carry the comm-plane "
+                         "wire fields (bytes_on_wire_compressed, "
+                         "compression_ratio) with ratio > 1")
     args = ap.parse_args(argv)
     failed = False
     for path in args.paths:
-        errs = check(path, args.require_extended, args.require_serve)
+        errs = check(path, args.require_extended, args.require_serve,
+                     args.require_comm)
         if errs:
             failed = True
             for e in errs:

@@ -1,0 +1,42 @@
+"""The pluggable communication plane: compressed client→server uplinks.
+
+The paper's wireless-heterogeneity half models WHEN an update arrives
+(delay rounds, fading channels, bandwidth deadlines) but the engine
+always shipped full-precision dense deltas — the environments were
+derating clients from a fictional payload. A ``CommPlane`` closes that
+gap: it compresses the stacked client deltas (x_k - prev) BEFORE the
+server reduction, with per-cohort error-feedback residual state carried
+as strategy aux (so the fused scan, the --no-scan loop and --resume all
+stay bit-identical), and the server consumes the compressed payload
+through fused dequantize-accumulate kernels
+(``kernels.server_plane.server_mix_compressed_tree``) — decompression
+rides the server's one HBM pass per round instead of materialising a
+dense f32 copy.
+
+Registered planes (``FLConfig.comm_plane`` / ``--comm-plane``):
+
+  * ``none`` — the dense full-precision path, bit-identical to the
+    engine before this module existed (``resolve`` returns None and the
+    round engine takes its original branch);
+  * ``bf16`` — deltas cast to bfloat16 (2x), error feedback exact: the
+    f32 residual of a bf16 rounding is exactly representable, so
+    compressed-sum + residual telescopes to the dense sum bitwise;
+  * ``q8``  — int8 stochastic-rounded quantization with one f32 scale
+    per cohort per dtype group (~4x); the rounding key is a pure
+    function of (seed, t), keeping scan == loop == resume;
+  * ``topk`` — top-k magnitude sparsification (``comm_topk_frac`` of
+    each dtype group survives as (value, position) pairs), served by
+    the sparse-scatter kernel.
+
+Adding a plane is one class: subclass ``CommPlane`` in ``plane.py``,
+decorate with ``@register``, and every entry point (round engine,
+launcher, benchmarks, bandwidth environment) picks it up.
+"""
+from __future__ import annotations
+
+from repro.comm.plane import (Bf16Plane, CommPlane, Q8Plane,  # noqa: F401
+                              TopKPlane, dense_bytes, get, names, register,
+                              resolve, wire_fraction)
+
+__all__ = ["CommPlane", "Bf16Plane", "Q8Plane", "TopKPlane", "register",
+           "names", "get", "resolve", "wire_fraction", "dense_bytes"]

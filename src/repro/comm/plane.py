@@ -1,0 +1,303 @@
+"""Comm-plane implementations: bf16 / q8 / top-k with error feedback.
+
+Every plane operates on the SAME flat per-dtype-group layout the fused
+server kernels use (``kernels.server_plane._dtype_groups``): the stacked
+client deltas ``x_k - prev`` are concatenated to one (K, N_g) matrix per
+dtype group, compressed there, and handed to the server reduction as
+``groups = [(leaf_idxs, payload)]`` — the exact input shape of
+``server_mix_compressed_tree``. Error-feedback residual state lives in
+the same flat layout, one ``(C, N_g)`` f32 array per group keyed
+``"g0"``/``"g1"``/..., carried through the round scan as
+``aux["comm"]`` so checkpoints and the shadow metrics tap see it like
+any other strategy state.
+
+Determinism contract (scan == loop == resume): ``compress`` is a pure
+function of ``(t, prev, client_params, residual)`` — the q8 stochastic
+rounding draws its uniforms from ``fold_in(fold_in(PRNGKey(seed), t),
+group)``, never from carried RNG state, so replaying round t from a
+checkpoint reproduces the exact quantization noise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.server_plane import _cat, _co_leaves, _dtype_groups
+
+_REGISTRY: dict = {}
+
+# Salt for the stochastic-rounding key stream so comm noise is
+# decorrelated from every other seed-derived stream in the engine.
+_COMM_SALT = 0x00C0FFEE
+
+
+def register(cls):
+    """Class decorator: register a CommPlane under cls.name (+ aliases)."""
+    _REGISTRY[cls.name] = cls
+    for alias in getattr(cls, "aliases", ()):
+        _REGISTRY[alias] = cls
+    return cls
+
+
+def names():
+    return sorted(set(_REGISTRY))
+
+
+def get(name: str):
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown comm plane {name!r}; known: none|{'|'.join(names())}"
+        ) from None
+
+
+def resolve(fl):
+    """FLConfig -> CommPlane instance, or None for the dense path.
+
+    ``None`` is the contract for ``comm_plane="none"``: the round engine
+    must take its pre-comm branch untouched (bit-identity with the
+    dense engine is a tested invariant, not an accident)."""
+    name = getattr(fl, "comm_plane", "none")
+    if name in ("none", "", None):
+        return None
+    return get(name)(fl)
+
+
+def dense_bytes(params) -> int:
+    """Bytes of one dense uncompressed upload of ``params``."""
+    return sum(int(x.size) * jnp.asarray(x).dtype.itemsize
+               for x in jax.tree.leaves(params))
+
+
+def wire_fraction(fl) -> float:
+    """Nominal compressed/dense payload ratio for the bandwidth env.
+
+    The environment layer prices airtime before a model exists, so this
+    is the plane's asymptotic ratio vs an f32 dense upload (per-group
+    scale words and index overheads amortise away at model scale);
+    ``bytes_on_wire_compressed`` in the metrics uses the exact per-model
+    ``payload_bytes`` instead."""
+    name = getattr(fl, "comm_plane", "none")
+    if name in ("none", "", None):
+        return 1.0
+    cls = get(name)
+    return cls.nominal_fraction(fl)
+
+
+class CommPlane:
+    """Base class: compress stacked client deltas before the reduction.
+
+    Subclasses implement ``_encode(key, e) -> (payload, dq)`` on one
+    flat (K, N) f32 error matrix ``e`` (delta + residual); the base
+    class owns grouping, error feedback, reconstruction and byte
+    accounting. ``payload`` kinds are the ``server_mix_compressed_tree``
+    contract: ``{"kind": "delta", "d": (K,N) int8|bf16, "scale": (K,)}``
+    or ``{"kind": "topk", "v": (K,kk) f32, "i": (K,kk) int32}``."""
+
+    name = "base"
+    aliases: tuple = ()
+
+    def __init__(self, fl):
+        self.fl = fl
+        self.error_feedback = bool(getattr(fl, "comm_error_feedback", True))
+
+    # -- residual state ----------------------------------------------------
+    def init_residual(self, params, cohort: int):
+        """{"g0": (cohort, N_0) f32, ...} zeros, one entry per dtype
+        group of ``params`` — or {} when error feedback is off."""
+        if not self.error_feedback:
+            return {}
+        leaves = jax.tree.leaves(params)
+        res = {}
+        for gi, idxs in enumerate(_dtype_groups(leaves).values()):
+            n = sum(int(leaves[i].size) for i in idxs)
+            res[f"g{gi}"] = jnp.zeros((cohort, n), jnp.float32)
+        return res
+
+    # -- compression -------------------------------------------------------
+    def compress(self, t, prev_global, client_params, residual):
+        """(groups, new_residual): quantize stacked deltas per group.
+
+        Pure in (t, arrays): safe under scan/jit/donation. ``residual``
+        must match ``init_residual`` (possibly {})."""
+        leaves_p, treedef = jax.tree.flatten(prev_global)
+        leaves_c = _co_leaves(client_params, treedef)
+        base = jax.random.fold_in(
+            jax.random.PRNGKey(self.fl.seed ^ _COMM_SALT),
+            jnp.asarray(t, jnp.uint32))
+        groups, new_res = [], {}
+        for gi, idxs in enumerate(_dtype_groups(leaves_p).values()):
+            K = leaves_c[idxs[0]].shape[0]
+            d = _cat([
+                leaves_c[i].reshape(K, -1).astype(jnp.float32)
+                - leaves_p[i].reshape(-1).astype(jnp.float32)[None]
+                for i in idxs])
+            rk = f"g{gi}"
+            e = d + residual[rk] if rk in residual else d
+            payload, dq = self._encode(jax.random.fold_in(base, gi), e)
+            if self.error_feedback:
+                new_res[rk] = e - dq
+            groups.append((idxs, payload))
+        return groups, new_res
+
+    # -- reconstruction (reduced path / strategies without a fused hook) ---
+    def reconstruct(self, prev_global, groups):
+        """Stacked client tree ``prev + dequant(payload)`` — what the
+        server would have seen had the clients uploaded the compressed
+        deltas and the server densified them. Used by the pre-reduction
+        path and by strategies without a ``compressed_server_update``."""
+        leaves_p, treedef = jax.tree.flatten(prev_global)
+        out = [None] * len(leaves_p)
+        for idxs, payload in groups:
+            fp = _cat([leaves_p[i].reshape(-1) for i in idxs])
+            dq = decode(payload, int(fp.shape[0]))
+            flat = fp.astype(jnp.float32)[None, :] + dq
+            K = flat.shape[0]
+            off = 0
+            for i in idxs:
+                n = int(leaves_p[i].size)
+                out[i] = (flat[:, off:off + n]
+                          .reshape((K,) + leaves_p[i].shape)
+                          .astype(leaves_p[i].dtype))
+                off += n
+        return treedef.unflatten(out)
+
+    # -- byte accounting ---------------------------------------------------
+    def payload_bytes(self, params) -> int:
+        """Exact bytes one client uploads for one round (static)."""
+        leaves = jax.tree.leaves(params)
+        total = 0
+        for idxs in _dtype_groups(leaves).values():
+            total += self._group_bytes(
+                sum(int(leaves[i].size) for i in idxs))
+        return total
+
+    # -- subclass hooks ----------------------------------------------------
+    def _encode(self, key, e):
+        raise NotImplementedError
+
+    def _group_bytes(self, n: int) -> int:
+        raise NotImplementedError
+
+    @classmethod
+    def nominal_fraction(cls, fl) -> float:
+        raise NotImplementedError
+
+
+def decode(payload, n: int):
+    """Dequantize one flat payload to its dense (K, n) f32 delta."""
+    if payload["kind"] == "delta":
+        return (payload["d"].astype(jnp.float32)
+                * payload["scale"][:, None].astype(jnp.float32))
+    if payload["kind"] == "topk":
+        K = payload["v"].shape[0]
+        rows = jnp.arange(K, dtype=jnp.int32)[:, None]
+        return (jnp.zeros((K, n), jnp.float32)
+                .at[rows, payload["i"].astype(jnp.int32)]
+                .add(payload["v"].astype(jnp.float32)))
+    raise ValueError(f"unknown payload kind {payload['kind']!r}")
+
+
+def q8_encode(key, e):
+    """Stochastic int8 rows: scale = max|e| / 127 per row, q = ⌊y + u⌋.
+
+    Unbiased (E[q·scale] = e) and bounded: |e - q·scale| ≤ scale
+    elementwise, since |y| ≤ 127 by construction and ⌊y + u⌋ with
+    u ∈ [0, 1) lands on one of the two integers bracketing y."""
+    amax = jnp.max(jnp.abs(e), axis=-1)
+    scale = jnp.maximum(amax, jnp.float32(1e-30)) / jnp.float32(127.0)
+    y = e / scale[:, None]
+    u = jax.random.uniform(key, e.shape, jnp.float32)
+    q = jnp.clip(jnp.floor(y + u), -127.0, 127.0).astype(jnp.int8)
+    payload = {"kind": "delta", "d": q, "scale": scale}
+    return payload, q.astype(jnp.float32) * scale[:, None]
+
+
+def bf16_encode(e):
+    """bf16 rows, unit scale. The rounding error of an f32 under bf16
+    truncation is exactly representable in f32 (the dropped low 16
+    mantissa bits), so error feedback telescopes EXACTLY: compressed
+    round sums + final residual == dense sums bitwise."""
+    q = e.astype(jnp.bfloat16)
+    scale = jnp.ones((e.shape[0],), jnp.float32)
+    payload = {"kind": "delta", "d": q, "scale": scale}
+    return payload, q.astype(jnp.float32)
+
+
+def topk_encode(e, kk: int):
+    """Keep the kk largest-|.| entries per row as (value, position)."""
+    _, idx = jax.lax.top_k(jnp.abs(e), kk)
+    idx = idx.astype(jnp.int32)
+    vals = jnp.take_along_axis(e, idx, axis=-1)
+    payload = {"kind": "topk", "v": vals, "i": idx}
+    K = e.shape[0]
+    rows = jnp.arange(K, dtype=jnp.int32)[:, None]
+    dq = jnp.zeros(e.shape, jnp.float32).at[rows, idx].add(vals)
+    return payload, dq
+
+
+@register
+class Bf16Plane(CommPlane):
+    """Deltas cast to bfloat16 (2x vs f32), exact error feedback."""
+
+    name = "bf16"
+
+    def _encode(self, key, e):
+        del key
+        return bf16_encode(e)
+
+    def _group_bytes(self, n: int) -> int:
+        return 2 * n
+
+    @classmethod
+    def nominal_fraction(cls, fl) -> float:
+        return 0.5
+
+
+@register
+class Q8Plane(CommPlane):
+    """Stochastic-rounded int8 deltas + per-row f32 scale (~4x)."""
+
+    name = "q8"
+    aliases = ("int8",)
+
+    def _encode(self, key, e):
+        return q8_encode(key, e)
+
+    def _group_bytes(self, n: int) -> int:
+        return n + 4        # int8 payload + one f32 scale word
+
+    @classmethod
+    def nominal_fraction(cls, fl) -> float:
+        return 0.25
+
+
+@register
+class TopKPlane(CommPlane):
+    """Top-k magnitude sparsification: keep ``comm_topk_frac`` of each
+    dtype group as (f32 value, int32 position) pairs."""
+
+    name = "topk"
+
+    def __init__(self, fl):
+        super().__init__(fl)
+        self.frac = float(getattr(fl, "comm_topk_frac", 0.01))
+        if not 0.0 < self.frac <= 1.0:
+            raise ValueError(
+                f"comm_topk_frac must be in (0, 1], got {self.frac}")
+
+    def _kk(self, n: int) -> int:
+        return max(1, min(n, int(self.frac * n)))
+
+    def _encode(self, key, e):
+        del key
+        return topk_encode(e, self._kk(int(e.shape[-1])))
+
+    def _group_bytes(self, n: int) -> int:
+        return 8 * self._kk(n)      # f32 value + int32 position per entry
+
+    @classmethod
+    def nominal_fraction(cls, fl) -> float:
+        frac = float(getattr(fl, "comm_topk_frac", 0.01))
+        return min(1.0, 2.0 * frac)

@@ -168,6 +168,17 @@ class FLConfig:
     #                 (kernel-body validation; slow, tests only)
     #   "legacy"    — the original per-leaf aggregate() chain
     server_plane: str = "fused"
+    # compressed client->server uplink (repro.comm registry):
+    #   "none" — dense full-precision deltas (bit-identical legacy path)
+    #   "bf16" — deltas cast to bfloat16 (2x, exact error feedback)
+    #   "q8"   — stochastic-rounded int8 + per-cohort scale (~4x)
+    #   "topk" — top-k magnitude sparsification ((value, index) pairs)
+    # The bandwidth environment's deadline check and the extended
+    # metrics' bytes_on_wire_compressed consume the ACTUAL compressed
+    # payload size, so delay tolerance becomes a function of the plane.
+    comm_plane: str = "none"
+    comm_topk_frac: float = 0.01   # topk: surviving fraction per dtype group
+    comm_error_feedback: bool = True  # carry the EF residual (aux["comm"])
     # the client-plane execution mode for MIXED (limited x unlimited)
     # cohorts (core.round.make_round_step; ``fes_static`` below is the
     # third, all-limited mode):

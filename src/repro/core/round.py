@@ -61,11 +61,22 @@ def as_scan_scheds(sb: dict) -> dict:
 
 def init_state(model, fl: FLConfig, key, strategy=None):
     """Round-loop carry: global params, round index, strategy aux state
-    (async ring buffer, fedopt moments, ... — {} for stateless rules)."""
+    (async ring buffer, fedopt moments, ... — {} for stateless rules).
+    With a comm plane active (``fl.comm_plane != "none"``) the
+    error-feedback residual rides the same carry under ``aux["comm"]``
+    — one (C, N_g) f32 array per dtype group, C the stacked cohort
+    width — so checkpoints/resume carry it like any strategy state."""
     strategy = strategy or strategies.resolve(fl)
     params = model.init(key)
-    return {"params": params, "t": jnp.zeros((), jnp.int32),
-            "aux": strategy.init_state(params)}
+    aux = strategy.init_state(params)
+    from repro import comm
+    plane = comm.resolve(fl)
+    if plane is not None:
+        res = plane.init_residual(params, fl.clients_per_round)
+        if res:
+            aux = dict(aux)
+            aux["comm"] = res
+    return {"params": params, "t": jnp.zeros((), jnp.int32), "aux": aux}
 
 
 def make_round_step(model, fl: FLConfig, strategy=None):
@@ -109,6 +120,13 @@ def make_round_step(model, fl: FLConfig, strategy=None):
     if extended:
         from repro.obs.metrics import payload_bytes, round_metrics
 
+    # comm plane (fl.comm_plane): compress the stacked client deltas
+    # BEFORE the server reduction. None for "none" — every branch below
+    # is then untaken and the traced program is the pre-comm one
+    # byte-for-byte (bit-identity gated by tests/test_comm_plane.py).
+    from repro import comm
+    comm_plane = comm.resolve(fl)
+
     def round_step(state, batch, sched, _tap=None):
         t = state["t"]
         prev_global = state["params"]
@@ -116,6 +134,16 @@ def make_round_step(model, fl: FLConfig, strategy=None):
         batch = constrain_leading(batch, "client")
         client_params, losses = local_train(prev_global, batch, sched)
         client_params = constrain_leading(client_params, "client")
+        # compressed uplink: quantize/sparsify the deltas (plus carried
+        # error-feedback residual), then hand the SERVER only what the
+        # wire would deliver. The residual is comm-plane state, not
+        # strategy state — popped here so strategies never see it.
+        srv_aux = state["aux"]
+        groups = new_res = None
+        if comm_plane is not None:
+            srv_aux = {k: v for k, v in state["aux"].items() if k != "comm"}
+            groups, new_res = comm_plane.compress(
+                t, prev_global, client_params, state["aux"].get("comm", {}))
         # pre-reduce the stacked client axis when it is actually
         # distributed (fl.client_reduce: "auto" checks the ACTIVE mesh at
         # trace time; "force" for CPU equivalence tests): the weighted
@@ -126,19 +154,35 @@ def make_round_step(model, fl: FLConfig, strategy=None):
         mode = getattr(fl, "client_reduce", "auto")
         new_params = aux = None
         if mode == "force" or (mode == "auto" and axis_size("client") > 1):
+            cp = (comm_plane.reconstruct(prev_global, groups)
+                  if comm_plane is not None else client_params)
             out = strategy.reduced_server_update(
-                t, prev_global, client_params, sched, state["aux"])
+                t, prev_global, cp, sched, srv_aux)
             if out is not NotImplemented:
                 new_params, aux = out
         elif mode not in ("auto", "off"):
             raise ValueError(f"unknown client_reduce {mode!r}; "
                              "expected 'auto' | 'off' | 'force'")
+        if new_params is None and comm_plane is not None:
+            # fused dequantize-accumulate: the mix family consumes the
+            # compressed payload in-kernel; strategies whose update is
+            # not linear in the deltas return NotImplemented and take
+            # the densified fallback below
+            out = strategy.compressed_server_update(
+                t, prev_global, groups, sched, srv_aux)
+            if out is not NotImplemented:
+                new_params, aux = out
+            else:
+                client_params = comm_plane.reconstruct(prev_global, groups)
         if new_params is None:
             # ONE fused server-plane pass: staleness weights, delta
             # accumulation, ring-buffer mix and (fedopt) server-Adam in
             # a single kernel dispatch (fl.server_plane selects the impl)
             new_params, aux = strategy.fused_server_update(
-                t, prev_global, client_params, sched, state["aux"])
+                t, prev_global, client_params, sched, srv_aux)
+        if new_res:
+            aux = dict(aux)
+            aux["comm"] = new_res
         on_time = jnp.logical_not(sched["delayed"])
         metrics = {"loss": jnp.mean(losses),
                    "n_on_time": jnp.sum(on_time.astype(jnp.int32))}
@@ -161,7 +205,10 @@ def make_round_step(model, fl: FLConfig, strategy=None):
             metrics.update(round_metrics(
                 fl, strategy, t, tap["params"], client_params,
                 new_params, sched, tap["aux"],
-                payload=payload_bytes(prev_global)))
+                payload=payload_bytes(prev_global),
+                payload_compressed=(
+                    comm_plane.payload_bytes(prev_global)
+                    if comm_plane is not None else None)))
         return {"params": new_params, "t": t + 1, "aux": aux}, metrics
 
     return round_step
@@ -238,10 +285,14 @@ def make_train_step_for_lowering(model, fl: FLConfig):
     fused server plane lowers as the flat oracle (see
     ``kernels.server_plane._route``), so the dry-run's HLO cost analysis
     sees the real fused op sequence, not interpreter emulation."""
+    from repro import comm
     strategy = strategies.resolve(fl)
     round_step = make_round_step(model, fl, strategy)
+    plane = comm.resolve(fl)
 
-    if strategy.stateful:
+    # a comm plane with error feedback makes aux non-empty even for
+    # stateless strategies (the residual rides aux["comm"])
+    if strategy.stateful or (plane is not None and plane.error_feedback):
         def step(params, aux, t, batch, sched):
             state = {"params": params, "t": t, "aux": aux}
             out, metrics = round_step(state, batch, sched)

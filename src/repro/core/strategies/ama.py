@@ -61,6 +61,21 @@ class AMAStrategy(ServerStrategy):
             mix_coefs(self.fl, t), impl=self.server_impl)
         return new_global, aux_state
 
+    def compressed_server_update(self, t, prev_global, groups, sched,
+                                 aux_state):
+        """Eq. 5 mix consuming compressed deltas in-kernel (q8/bf16 rows
+        or top-k scatter); "legacy" has no compressed path — the engine
+        densifies and falls back."""
+        if self.server_impl == "legacy":
+            return NotImplemented
+        from repro.kernels.server_plane import (mix_coefs,
+                                                server_mix_compressed_tree)
+        keep = jnp.logical_not(sched["delayed"]).astype(jnp.float32)
+        new_global = server_mix_compressed_tree(
+            prev_global, groups, sched["data_sizes"], keep,
+            mix_coefs(self.fl, t), impl=self.server_impl)
+        return new_global, aux_state
+
     def reduced_server_update(self, t, prev_global, client_params, sched,
                               aux_state):
         fl = self.fl

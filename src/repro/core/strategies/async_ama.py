@@ -55,6 +55,16 @@ class AsyncAMAStrategy(AMAStrategy):
             on_time, queue, use_kernel=self.fl.use_kernel)
         return new_global, {"queue": queue}
 
+    def compressed_server_update(self, t, prev_global, groups, sched,
+                                 aux_state):
+        """The ring-buffer enqueue needs the DENSE delayed updates (they
+        persist across rounds at full precision), so the AMA-family
+        compressed hook this class inherits does not apply — revert to
+        NotImplemented and let the round engine densify the payload
+        before ``fused_server_update``."""
+        del t, prev_global, groups, sched, aux_state
+        return NotImplemented
+
     def fused_server_update(self, t, prev_global, client_params, sched,
                             aux_state):
         if self.server_impl == "legacy":

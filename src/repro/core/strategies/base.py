@@ -76,6 +76,23 @@ class ServerStrategy:
         return self.aggregate(t, prev_global, client_params, sched,
                               aux_state)
 
+    def compressed_server_update(self, t, prev_global, groups, sched,
+                                 aux_state):
+        """The server update consuming a comm plane's COMPRESSED payload
+        directly — fused dequantize-accumulate, no dense (C, N) f32
+        intermediate.
+
+        ``groups`` is ``repro.comm``'s flat per-dtype-group payload list
+        (``[(leaf_idxs, payload)]``, see
+        ``kernels.server_plane.server_mix_compressed_tree``). The mix
+        family overrides this; strategies whose update is not linear in
+        the stacked deltas (async ring buffer, server-Adam) return
+        ``NotImplemented`` (the base default) and the round engine
+        densifies via ``CommPlane.reconstruct`` before their fused
+        update — same numbers, one extra dense pass."""
+        del t, prev_global, groups, sched, aux_state
+        return NotImplemented
+
     def reduced_server_update(self, t, prev_global, client_params, sched,
                               aux_state):
         """The server update with the stacked client axis PRE-REDUCED.

@@ -39,6 +39,22 @@ class FedAvgStrategy(ServerStrategy):
             mix_coefs(self.fl, t, adaptive=False), impl=self.server_impl)
         return new_global, aux_state
 
+    def compressed_server_update(self, t, prev_global, groups, sched,
+                                 aux_state):
+        """The alpha=0 corner of the compressed mix: keep drops limited
+        AND delayed clients, schedule zeroed."""
+        if self.server_impl == "legacy":
+            return NotImplemented
+        from repro.kernels.server_plane import (mix_coefs,
+                                                server_mix_compressed_tree)
+        keep = jnp.logical_and(
+            jnp.logical_not(sched["delayed"]),
+            jnp.logical_not(sched["limited"])).astype(jnp.float32)
+        new_global = server_mix_compressed_tree(
+            prev_global, groups, sched["data_sizes"], keep,
+            mix_coefs(self.fl, t, adaptive=False), impl=self.server_impl)
+        return new_global, aux_state
+
     def reduced_server_update(self, t, prev_global, client_params, sched,
                               aux_state):
         del t

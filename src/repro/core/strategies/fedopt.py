@@ -77,6 +77,16 @@ class FedOptStrategy(AMAStrategy):
                 prev_global, update)
         return new_global, {"m": m, "v": v, "step": step}
 
+    def compressed_server_update(self, t, prev_global, groups, sched,
+                                 aux_state):
+        """Server-Adam is nonlinear in the aggregated pseudo-gradient
+        (second moment, rsqrt), so the linear compressed mix this class
+        inherits from AMA does not describe it — revert to
+        NotImplemented; the round engine densifies the payload and
+        dispatches the fused Adam plane."""
+        del t, prev_global, groups, sched, aux_state
+        return NotImplemented
+
     def fused_server_update(self, t, prev_global, client_params, sched,
                             aux_state):
         if self.server_impl == "legacy":

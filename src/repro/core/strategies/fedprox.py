@@ -55,6 +55,19 @@ class FedProxStrategy(ServerStrategy):
             mix_coefs(self.fl, t, adaptive=False), impl=self.server_impl)
         return new_global, aux_state
 
+    def compressed_server_update(self, t, prev_global, groups, sched,
+                                 aux_state):
+        """On-time weighted average (alpha=0) over compressed deltas."""
+        if self.server_impl == "legacy":
+            return NotImplemented
+        from repro.kernels.server_plane import (mix_coefs,
+                                                server_mix_compressed_tree)
+        keep = jnp.logical_not(sched["delayed"]).astype(jnp.float32)
+        new_global = server_mix_compressed_tree(
+            prev_global, groups, sched["data_sizes"], keep,
+            mix_coefs(self.fl, t, adaptive=False), impl=self.server_impl)
+        return new_global, aux_state
+
     def reduced_server_update(self, t, prev_global, client_params, sched,
                               aux_state):
         del t

@@ -32,7 +32,14 @@ class BandwidthChannel(ChannelModel):
 
     def _delays_from_rate(self, rate):
         fl = self.fl
-        latency = fl.bw_upload_mbits / np.maximum(rate, 1e-9)
+        # the ACTUAL bits on the wire: the comm plane's compression
+        # ratio scales the upload, so delay tolerance (paper Fig. 3)
+        # becomes a function of the compression level. wire_fraction is
+        # exactly 1.0 for comm_plane="none" — the dense path's delay
+        # draws are untouched (bit-identity contract).
+        from repro.comm import wire_fraction
+        upload = fl.bw_upload_mbits * wire_fraction(fl)
+        latency = upload / np.maximum(rate, 1e-9)
         deadlines = np.ceil(latency / fl.bw_deadline_s).astype(np.int64)
         delayed = deadlines > 1
         delays = np.clip(deadlines - 1, 1, fl.max_delay).astype(np.int32)

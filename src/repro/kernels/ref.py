@@ -65,6 +65,63 @@ def server_mix_math(prev, stacked, sizes, keep, coefs):
     return acc.astype(prev.dtype)
 
 
+def server_mix_delta_math(prev, dstacked, rowscale, sizes, keep, coefs):
+    """The sync server plane consuming COMPRESSED CLIENT DELTAS: row k of
+    ``dstacked`` is client k's quantized delta d_k = x_k - prev (int8 or
+    bf16; ``rowscale[k]`` de-quantizes it), and the dequantize-accumulate
+    happens inside the one pass:
+
+        out = prev * (a_eff + beta * sum_k w_k)
+              + sum_k (beta * w_k * rowscale[k]) * d_k
+
+    — algebraically ``server_mix_math`` with x_k = prev + s_k d_k
+    substituted (sum_k w_k is 1 when anybody is kept, 0 otherwise, so
+    the tot == 0 round reverts to the previous model exactly as the
+    dense plane does).
+
+    prev: (n,); dstacked: (K, n) int8/bf16/f32; rowscale/sizes/keep:
+    (K,) f32; coefs: (4,) f32 = [alpha0, eta, alpha_cap, t].
+    """
+    alpha = jnp.minimum(coefs[0] + coefs[1] * coefs[3], coefs[2])
+    beta = 1.0 - alpha
+    w, tot = _norm_weights(sizes, keep)
+    a_eff = jnp.where(tot > 0, alpha, 1.0)
+    acc = prev.astype(jnp.float32) * (a_eff + beta * jnp.sum(w))
+    for k in range(dstacked.shape[0]):    # same fused multiply-add chain
+        acc = acc + dstacked[k].astype(jnp.float32) * (beta * w[k]
+                                                       * rowscale[k])
+    return acc.astype(prev.dtype)
+
+
+def server_mix_scatter_math(prev, vals, idx, sizes, keep, coefs, *,
+                            start=0):
+    """The sync server plane consuming TOP-K SPARSIFIED client deltas:
+    row k keeps its kk largest-magnitude delta elements, shipped as
+    (value, flat position) pairs, and the sparse scatter-accumulate
+    happens against the dense previous model in one pass (same mix
+    algebra as ``server_mix_delta_math``).
+
+    prev: (n,) — one tile of the flat parameter axis whose global
+    offset is ``start`` (0 for the whole-array oracle); vals: (K, kk)
+    f32; idx: (K, kk) int32 GLOBAL flat positions; sizes/keep: (K,)
+    f32; coefs: (4,) f32. Positions outside the tile are masked, so
+    tiling over ``start`` reproduces the start=0 oracle exactly.
+    """
+    n = prev.shape[0]
+    alpha = jnp.minimum(coefs[0] + coefs[1] * coefs[3], coefs[2])
+    beta = 1.0 - alpha
+    w, tot = _norm_weights(sizes, keep)
+    a_eff = jnp.where(tot > 0, alpha, 1.0)
+    acc = prev.astype(jnp.float32) * (a_eff + beta * jnp.sum(w))
+    for k in range(vals.shape[0]):        # one masked scatter per client
+        local = idx[k].astype(jnp.int32) - start
+        inside = jnp.logical_and(local >= 0, local < n)
+        contrib = (vals[k].astype(jnp.float32) * (beta * w[k])
+                   * inside.astype(jnp.float32))
+        acc = acc.at[jnp.clip(local, 0, n - 1)].add(contrib)
+    return acc.astype(prev.dtype)
+
+
 def server_async_math(prev, stacked, qsum, qgamma, sizes, delayed, delays,
                       tq, hyp):
     """The async server plane (paper Eqs. 6-11) in one pass: staleness

@@ -52,8 +52,9 @@ from repro.kernels import ref
 DEFAULT_BLOCK = 128 * 1024
 
 __all__ = ["server_mix_flat", "server_async_flat", "server_adam_flat",
+           "server_mix_delta_flat", "server_mix_scatter_flat",
            "server_mix_tree", "server_async_tree", "server_adam_tree",
-           "mix_coefs", "DEFAULT_BLOCK"]
+           "server_mix_compressed_tree", "mix_coefs", "DEFAULT_BLOCK"]
 
 
 def _interpret_default() -> bool:
@@ -109,6 +110,24 @@ def _mix_kernel(prev_ref, stacked_ref, sizes_ref, keep_ref, coefs_ref,
     out_ref[...] = ref.server_mix_math(
         prev_ref[...], stacked_ref[...], sizes_ref[...], keep_ref[...],
         coefs_ref[...])
+
+
+def _mix_delta_kernel(prev_ref, dstacked_ref, rowscale_ref, sizes_ref,
+                      keep_ref, coefs_ref, out_ref):
+    out_ref[...] = ref.server_mix_delta_math(
+        prev_ref[...], dstacked_ref[...], rowscale_ref[...], sizes_ref[...],
+        keep_ref[...], coefs_ref[...])
+
+
+def _mix_scatter_kernel(block, prev_ref, vals_ref, idx_ref, sizes_ref,
+                        keep_ref, coefs_ref, out_ref):
+    # the tile's global offset: positions outside [start, start+block)
+    # are masked inside the shared math, so the scatter composes with
+    # the 1-D tiling exactly like the dense accumulation does
+    start = pl.program_id(0) * block
+    out_ref[...] = ref.server_mix_scatter_math(
+        prev_ref[...], vals_ref[...], idx_ref[...], sizes_ref[...],
+        keep_ref[...], coefs_ref[...], start=start)
 
 
 def _async_kernel(prev_ref, stacked_ref, qsum_ref, qgamma_ref, sizes_ref,
@@ -167,6 +186,70 @@ def server_mix_flat(prev, stacked, sizes, keep, coefs, *,
         out_shape=jax.ShapeDtypeStruct(prev.shape, prev.dtype),
         interpret=interpret,
     )(prev, stacked, sizes, keep, coefs)
+    return out[:N] if pad else out
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def server_mix_delta_flat(prev, dstacked, rowscale, sizes, keep, coefs, *,
+                          block: int = DEFAULT_BLOCK,
+                          interpret: bool = False):
+    """Compressed-uplink sync plane: prev (N,); dstacked (K, N) quantized
+    deltas (int8 / bf16 / f32); rowscale (K,) f32 dequantization scales;
+    sizes/keep (K,) f32; coefs (4,). Dequantize-accumulate fused: the
+    int8/bf16 rows upcast INSIDE the kernel tile, so the server's HBM
+    pass streams the compressed bytes, not a dense f32 copy."""
+    (N,) = prev.shape
+    K = dstacked.shape[0]
+    block, pad, n_blocks = _grid(N, block)
+    if pad:
+        prev = jnp.pad(prev, (0, pad))
+        dstacked = jnp.pad(dstacked, ((0, 0), (0, pad)))
+    out = pl.pallas_call(
+        _mix_delta_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((K, block), lambda i: (0, i)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(prev.shape, prev.dtype),
+        interpret=interpret,
+    )(prev, dstacked, rowscale, sizes, keep, coefs)
+    return out[:N] if pad else out
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def server_mix_scatter_flat(prev, vals, idx, sizes, keep, coefs, *,
+                            block: int = DEFAULT_BLOCK,
+                            interpret: bool = False):
+    """Top-k sparsified sync plane: prev (N,); vals (K, kk) f32 surviving
+    delta values at GLOBAL flat positions idx (K, kk) int32; sizes/keep
+    (K,) f32; coefs (4,). Every tile sees the full (K, kk) coordinate
+    list (kk << N) and scatters only the in-tile positions."""
+    (N,) = prev.shape
+    K, kk = vals.shape
+    block, pad, n_blocks = _grid(N, block)
+    if pad:
+        prev = jnp.pad(prev, (0, pad))
+    out = pl.pallas_call(
+        functools.partial(_mix_scatter_kernel, block),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((K, kk), lambda i: (0, 0)),
+            pl.BlockSpec((K, kk), lambda i: (0, 0)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(prev.shape, prev.dtype),
+        interpret=interpret,
+    )(prev, vals, idx, sizes, keep, coefs)
     return out[:N] if pad else out
 
 
@@ -322,6 +405,49 @@ def server_mix_tree(prev, stacked, sizes, keep, coefs, *, impl: str = "fused",
                                      ls.reshape(ls.shape[0], -1),
                                      sizes, keep, coefs)
             out_leaves[i] = of.reshape(lp.shape)
+    return treedef.unflatten(out_leaves)
+
+
+def server_mix_compressed_tree(prev, groups, sizes, keep, coefs, *,
+                               impl: str = "fused",
+                               block: int = DEFAULT_BLOCK):
+    """Sync server plane consuming compressed client deltas directly —
+    the fused dequantize-accumulate dispatch behind the mix family's
+    ``ServerStrategy.compressed_server_update``.
+
+    ``groups`` is the flat per-dtype-group payload list a
+    ``repro.comm`` plane emits from ``compress``: ``(leaf_idxs,
+    payload)`` pairs where ``payload`` is either
+    ``{"kind": "delta", "d": (K, N) int8|bf16, "scale": (K,) f32}``
+    (q8 / bf16 planes) or ``{"kind": "topk", "v": (K, kk) f32,
+    "i": (K, kk) int32}`` (top-k sparsification). The leaf grouping is
+    the SAME ``_dtype_groups(prev leaves)`` split the dense tree
+    drivers use, so one kernel call per round per group consumes the
+    compressed bytes with no dense intermediate."""
+    kernel, interpret = _route(impl)
+    leaves_p, treedef = jax.tree.flatten(prev)
+    out_leaves = [None] * len(leaves_p)
+    for idxs, payload in groups:
+        fp = _cat([leaves_p[i].reshape(-1) for i in idxs])
+        if payload["kind"] == "topk":
+            if kernel:
+                of = server_mix_scatter_flat(
+                    fp, payload["v"], payload["i"], sizes, keep, coefs,
+                    block=block, interpret=interpret)
+            else:
+                of = ref.server_mix_scatter_math(
+                    fp, payload["v"], payload["i"], sizes, keep, coefs)
+        elif payload["kind"] == "delta":
+            if kernel:
+                of = server_mix_delta_flat(
+                    fp, payload["d"], payload["scale"], sizes, keep, coefs,
+                    block=block, interpret=interpret)
+            else:
+                of = ref.server_mix_delta_math(
+                    fp, payload["d"], payload["scale"], sizes, keep, coefs)
+        else:
+            raise ValueError(f"unknown payload kind {payload['kind']!r}")
+        _split_back(of, leaves_p, idxs, out_leaves)
     return treedef.unflatten(out_leaves)
 
 

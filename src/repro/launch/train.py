@@ -142,6 +142,11 @@ def pod_scale(args, fl: FLConfig):
     if args.reduced:
         cfg = reduced(cfg)
     model = build_model(cfg)
+    # pod scale's stacked client axis is the cohort count — align the
+    # config so comm-plane residual state (aux["comm"], sized by
+    # fl.clients_per_round in core.round.init_state) matches the (C, ...)
+    # client axis the round step actually carries
+    fl = fl.with_(clients_per_round=fl.cohorts)
     strategy = strategies.resolve(fl)
     state = init_state(model, fl, jax.random.PRNGKey(fl.seed), strategy)
     if args.resume:
@@ -256,6 +261,18 @@ def main():
     ap.add_argument("--prefetch-depth", type=int, default=1,
                     help="staged chunks buffered ahead of the device "
                          "(host memory ~ depth x chunk bytes)")
+    ap.add_argument("--comm-plane", default="none",
+                    choices=("none", "bf16", "q8", "topk"),
+                    help="compressed client->server uplink (repro.comm): "
+                         "dense f32 (default, bit-identical legacy "
+                         "path), bf16 cast (2x), stochastic int8 (~4x) "
+                         "or top-k sparsification — all with "
+                         "error-feedback residual carried in the round "
+                         "state; the bandwidth env and the wire metrics "
+                         "consume the real compressed payload size")
+    ap.add_argument("--comm-topk-frac", type=float, default=0.01,
+                    help="topk plane: surviving fraction of each dtype "
+                         "group per round")
     ap.add_argument("--client-reduce", default="auto",
                     choices=("auto", "off", "force"),
                     help="pre-reduce the stacked client axis before the "
@@ -305,6 +322,8 @@ def main():
                   population=args.population,
                   prefetch_depth=args.prefetch_depth,
                   client_reduce=args.client_reduce,
+                  comm_plane=args.comm_plane,
+                  comm_topk_frac=args.comm_topk_frac,
                   cohorts=args.cohorts, local_steps=args.local_steps,
                   seed=args.seed)
     if args.scenario:

@@ -33,10 +33,12 @@ import json
 
 import numpy as np
 
-#: v2 adds the serving-plane rows ("serve", "serve_summary"); v1 files
-#: (training/eval telemetry only) remain readable
-SCHEMA_VERSION = 2
-SUPPORTED_SCHEMAS = (1, 2)
+#: v2 adds the serving-plane rows ("serve", "serve_summary"); v3 adds
+#: the comm-plane wire fields on round rows (bytes_on_wire_compressed,
+#: compression_ratio — optional, like every extended round metric);
+#: v1/v2 files (without them) remain readable
+SCHEMA_VERSION = 3
+SUPPORTED_SCHEMAS = (1, 2, 3)
 
 #: required keys per row kind (extended round metrics are optional —
 #: a base run logs only loss/participation)
@@ -207,9 +209,13 @@ def validate_rows(rows: list[dict]) -> list[str]:
             else:
                 prev_t = row["t"]
             for k in ("loss", "mean_delay", "alpha_eff", "delta_norm",
-                      "update_norm", "bytes_on_wire"):
+                      "update_norm", "bytes_on_wire",
+                      "bytes_on_wire_compressed", "compression_ratio"):
                 if k in row and not isinstance(row[k], (int, float)):
                     errs.append(f"row {i}: {k} must be numeric")
+            for k in ("bytes_on_wire_compressed", "compression_ratio"):
+                if isinstance(row.get(k), (int, float)) and row[k] < 0:
+                    errs.append(f"row {i}: {k} must be >= 0")
             if "stale_hist" in row and not isinstance(row["stale_hist"],
                                                       list):
                 errs.append(f"row {i}: stale_hist must be a list")

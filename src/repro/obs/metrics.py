@@ -27,7 +27,8 @@ import numpy as np
 #: ``max_delay + 1`` staleness-bin counts, everything else a scalar
 ROUND_METRIC_KEYS = ("n_limited", "n_delayed", "mean_delay", "stale_hist",
                      "alpha_eff", "delta_norm", "update_norm",
-                     "bytes_on_wire")
+                     "bytes_on_wire", "bytes_on_wire_compressed",
+                     "compression_ratio")
 
 
 def payload_bytes(params) -> int:
@@ -48,7 +49,8 @@ def _global_norm(tree) -> jnp.ndarray:
 
 
 def round_metrics(fl, strategy, t, prev_global, client_params, new_params,
-                  sched, aux_state, *, payload: int) -> dict:
+                  sched, aux_state, *, payload: int,
+                  payload_compressed: int | None = None) -> dict:
     """The extended per-round metric dict (all traced, fixed shapes).
 
     * participation: ``n_limited`` / ``n_delayed`` cohort counts;
@@ -64,7 +66,11 @@ def round_metrics(fl, strategy, t, prev_global, client_params, new_params,
       ``update_norm`` — l2 norm of the server step actually taken;
     * wire: ``bytes_on_wire`` = on-time uploads x the static per-client
       payload (delayed cohorts are charged on their arrival round via
-      the staleness path they ride).
+      the staleness path they ride); ``bytes_on_wire_compressed`` = the
+      same count x the ACTUAL bytes the active comm plane ships
+      (``CommPlane.payload_bytes`` — equal to the dense payload when
+      ``comm_plane="none"``); ``compression_ratio`` = dense/compressed
+      per-client bytes (1.0 for the dense plane, ~4 for q8, ...).
     """
     delayed = sched["delayed"].astype(jnp.float32)
     delays = sched["delays"].astype(jnp.float32)
@@ -92,6 +98,11 @@ def round_metrics(fl, strategy, t, prev_global, client_params, new_params,
         "delta_norm": _global_norm(deltas),
         "update_norm": _global_norm(step),
         "bytes_on_wire": n_on_time * jnp.float32(payload),
+        "bytes_on_wire_compressed": n_on_time * jnp.float32(
+            payload if payload_compressed is None else payload_compressed),
+        "compression_ratio": jnp.float32(
+            1.0 if payload_compressed is None
+            else payload / max(payload_compressed, 1)),
     }
 
 

@@ -1,0 +1,104 @@
+"""Property tests for the comm-plane codecs (hypothesis-gated, nightly).
+
+Tier-1 installs no hypothesis, so this whole module self-skips there;
+the nightly CI job un-skips it (same split as tests/test_partition.py).
+The deterministic spot-check versions of these invariants run tier-1 in
+tests/test_comm_plane.py — here hypothesis drives the codec math over
+adversarial magnitudes (denormals, huge dynamic range, constant rows):
+
+  * q8 — stochastic int8 round trip obeys the elementwise bound
+    |e - dq| <= scale with scale = max|e|/127 per row, for ANY finite
+    input row;
+  * top-k — the kept coordinate set carries at least as much |.| mass
+    as any k coordinates, i.e. exactly the k largest magnitudes
+    (stated tie-safely via the mass, not the index set);
+  * bf16 error feedback — the residual telescopes EXACTLY: at every
+    round q_t + r_t == e_t in f32 (an f32's bf16 rounding error is
+    exactly representable), so compressed sums + final residual
+    reproduce the dense sum. The one concession: XLA may flush a
+    DENORMAL residual to zero, so "exact" is bitwise above the
+    smallest normal f32 and bounded by it below.
+"""
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis",
+                          reason="property tests need hypothesis")
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.comm.plane import (bf16_encode, decode, q8_encode,  # noqa: E402
+                              topk_encode)
+
+SETTINGS = settings(max_examples=40, deadline=None)
+
+finite = st.floats(min_value=-1e6, max_value=1e6, allow_nan=False,
+                   width=32)
+rows = st.lists(
+    st.lists(finite, min_size=4, max_size=64).map(np.float32),
+    min_size=1, max_size=4).filter(
+        lambda ls: len({len(r) for r in ls}) == 1)
+
+
+@SETTINGS
+@given(rows=rows, seed=st.integers(0, 2**31 - 1))
+def test_q8_roundtrip_error_bounded_and_int8(rows, seed):
+    e = jnp.asarray(np.stack(rows), jnp.float32)
+    payload, dq = q8_encode(jax.random.PRNGKey(seed), e)
+    assert payload["d"].dtype == jnp.int8
+    scale = np.asarray(payload["scale"], np.float64)
+    err = np.abs(np.asarray(e, np.float64) - np.asarray(dq, np.float64))
+    # |e - q*scale| <= scale elementwise (stochastic floor lands on one
+    # of the two bracketing integers; clip only triggers at |y| = 127)
+    assert np.all(err <= scale[:, None] * (1 + 1e-6))
+    # decode() reproduces the encoder's own dequantization exactly
+    np.testing.assert_array_equal(np.asarray(decode(payload, e.shape[1])),
+                                  np.asarray(dq))
+
+
+@SETTINGS
+@given(rows=rows, frac=st.floats(0.05, 1.0))
+def test_topk_keeps_the_k_largest_magnitudes(rows, frac):
+    e = jnp.asarray(np.stack(rows), jnp.float32)
+    n = e.shape[1]
+    kk = max(1, min(n, int(frac * n)))
+    payload, dq = topk_encode(e, kk)
+    assert payload["v"].shape == payload["i"].shape == (e.shape[0], kk)
+    ea = np.abs(np.asarray(e, np.float64))
+    kept = np.abs(np.asarray(payload["v"], np.float64))
+    for r in range(e.shape[0]):
+        # tie-safe statement of "the k largest": the kept mass equals
+        # the sum of the k largest |e| (any argsort tiebreak ok)
+        want = np.sort(ea[r])[::-1][:kk].sum()
+        assert kept[r].sum() == pytest.approx(want, rel=1e-9)
+    # dense reconstruction touches at most kk coordinates per row
+    assert np.count_nonzero(np.asarray(dq), axis=1).max() <= kk
+
+
+@SETTINGS
+@given(rows=rows, n_rounds=st.integers(1, 5))
+def test_bf16_error_feedback_telescopes_exactly(rows, n_rounds):
+    """Per-round EXACT split e_t = q_t + r_t in f32 arithmetic, so
+    sum(q_t) + r_T == sum(d_t) up to f32 summation order — the
+    compressed stream loses nothing the residual does not carry."""
+    tiny = np.finfo(np.float32).tiny        # smallest NORMAL f32
+    d = jnp.asarray(np.stack(rows), jnp.float32)
+    r = jnp.zeros_like(d)
+    q_sum = np.zeros(d.shape, np.float64)
+    for _ in range(n_rounds):
+        e = d + r
+        payload, dq = bf16_encode(e)
+        assert payload["d"].dtype == jnp.bfloat16
+        r = e - dq
+        # the defining exactness: dq + r == e bitwise (bf16 rounding
+        # error of an f32 is exactly representable in f32) — except
+        # that XLA may flush a DENORMAL residual to zero, so any
+        # discrepancy must sit strictly below the normal range
+        diff = np.abs(np.asarray(dq + r, np.float64) - np.asarray(e))
+        assert np.all((diff == 0) | (diff < tiny))
+        q_sum += np.asarray(dq, np.float64)
+    dense_sum = n_rounds * np.asarray(d, np.float64)
+    np.testing.assert_allclose(q_sum + np.asarray(r, np.float64),
+                               dense_sum, rtol=1e-6, atol=1e-6)
