@@ -27,6 +27,9 @@ module + baseline + checks in ``bench_gates.json``.
 
 Usage:  PYTHONPATH=src python scripts/check_bench.py [--out-dir DIR]
         ... check_bench.py --only comm_plane   # a single gate
+        ... check_bench.py --json out.json     # also write the failed
+        gates as a findings JSON artifact (the same
+        ``repro.analysis.findings`` schema fedlint emits)
 """
 from __future__ import annotations
 
@@ -37,6 +40,8 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(ROOT, "benchmarks"))
+
+from repro.analysis.findings import Finding, write_json  # noqa: E402
 
 MANIFEST = os.path.join(ROOT, "scripts", "bench_gates.json")
 
@@ -52,8 +57,8 @@ def lookup(record: dict, path: str):
 
 
 def check_one(name: str, spec: dict, default_factor: float, rec: dict,
-              baseline: dict) -> list[str]:
-    """Apply one benchmark's checks; returns failure descriptions."""
+              baseline: dict) -> list[tuple[str, str]]:
+    """Apply one benchmark's checks; returns (label, detail) failures."""
     fails = []
     for chk in spec["checks"]:
         fresh = float(lookup(rec, chk["metric"]))
@@ -71,7 +76,10 @@ def check_one(name: str, spec: dict, default_factor: float, rec: dict,
         print(f"{name}: {chk['metric']} {fresh:.3f} vs {rel} {bound:.3f} "
               f"({factor:g} x baseline {chk['against']}) -> {verdict}")
         if not ok:
-            fails.append(f"{name}.{chk['metric']} ({direction} check)")
+            fails.append((f"{name}.{chk['metric']} ({direction} check)",
+                          f"{chk['metric']} {fresh:.3f} crossed its {rel} "
+                          f"{bound:.3f} ({factor:g} x baseline "
+                          f"{chk['against']} = {base:.3f})"))
     return fails
 
 
@@ -99,6 +107,9 @@ def main() -> int:
     ap.add_argument("--only", default=None,
                     help="run a single gate from the manifest")
     ap.add_argument("--manifest", default=MANIFEST)
+    ap.add_argument("--json", dest="json_out", default=None, metavar="PATH",
+                    help="also write the failed gates as a findings JSON "
+                         "artifact (repro.analysis.findings schema)")
     args = ap.parse_args()
     os.makedirs(args.out_dir, exist_ok=True)
 
@@ -113,7 +124,7 @@ def main() -> int:
             return 2
         gates = {args.only: gates[args.only]}
 
-    failures = []
+    failures, findings = [], []
     for name, spec in gates.items():
         path = os.path.join(ROOT, spec["baseline"])
         with open(path) as f:
@@ -127,9 +138,14 @@ def main() -> int:
             f.write("\n")
         fails = check_one(name, spec, default_factor, rec, baseline)
         if fails:
-            failures.extend(fails)
+            failures.extend(label for label, _ in fails)
+            findings.extend(
+                Finding(rule="BENCH-REGRESSION", path=spec["baseline"],
+                        line=0, message=detail) for _, detail in fails)
             provenance_triage(name, baseline, rec)
 
+    if args.json_out:
+        write_json(args.json_out, "check_bench", findings)
     if failures:
         print(f"benchmark regression gate FAILED: {failures} — a gated "
               f"metric crossed its manifest bound (re-baseline "

@@ -16,12 +16,17 @@ Usage:  PYTHONPATH=src python scripts/check_metrics.py run.jsonl [...]
         ... check_metrics.py --require-comm run.jsonl       # comm-plane
         runs: round rows must carry the compressed-wire fields with an
         actual compression (ratio > 1)
+        ... check_metrics.py --json out.json run.jsonl      # also write
+        the violations as a findings JSON artifact (the same
+        ``repro.analysis.findings`` schema fedlint emits, so one CI
+        consumer parses every gate)
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
+from repro.analysis.findings import Finding, write_json
 from repro.obs.log import read_rows, validate_rows
 from repro.obs.metrics import ROUND_METRIC_KEYS
 
@@ -88,8 +93,12 @@ def main(argv=None) -> int:
                     help="fail unless round rows carry the comm-plane "
                          "wire fields (bytes_on_wire_compressed, "
                          "compression_ratio) with ratio > 1")
+    ap.add_argument("--json", dest="json_out", default=None, metavar="PATH",
+                    help="also write the violations as a findings JSON "
+                         "artifact (repro.analysis.findings schema)")
     args = ap.parse_args(argv)
     failed = False
+    findings = []
     for path in args.paths:
         errs = check(path, args.require_extended, args.require_serve,
                      args.require_comm)
@@ -97,6 +106,8 @@ def main(argv=None) -> int:
             failed = True
             for e in errs:
                 print(f"{path}: {e}")
+            findings.extend(Finding(rule="METRICS", path=path, line=0,
+                                    message=e) for e in errs)
         else:
             rows = read_rows(path)
             n_round = sum(r.get("kind") == "round" for r in rows)
@@ -105,6 +116,8 @@ def main(argv=None) -> int:
             extra = f", {n_serve} serve rows" if n_serve else ""
             print(f"{path}: OK ({n_round} round rows, {n_eval} evals"
                   f"{extra})")
+    if args.json_out:
+        write_json(args.json_out, "check_metrics", findings)
     return 1 if failed else 0
 
 

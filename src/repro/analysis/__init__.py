@@ -1,0 +1,98 @@
+"""fedlint — the repo's static invariant analyzer (two layers).
+
+Layer 1 (``ast_rules``) reads host-side Python over ``src/``,
+``benchmarks/``, ``scripts/``; layer 2 (``jaxpr_rules``) traces the
+engine's real programs from the strategy registry and checks the
+lowering/jaxpr. Run it as::
+
+    PYTHONPATH=src python -m repro.analysis [--json] [--out FILE]
+                                            [--select RULE,...] [paths]
+
+Exit 0 iff there are zero unsuppressed findings. Suppress a finding on
+its line with ``# fedlint: disable=RULE — <justification>`` (see
+``suppress``). The rule catalogue lives in ``RULES``; each entry names
+the invariant and the incident that motivated it (README "Static
+analysis & invariants").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.findings import (Finding, findings_json, summarize,
+                                     write_json)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    name: str
+    layer: str          # "ast" | "jaxpr"
+    doc: str
+
+
+RULES: dict[str, Rule] = {r.id: r for r in [
+    Rule("FED100", "suppression-without-justification", "ast",
+         "a '# fedlint: disable=...' comment must say WHY it is safe"),
+    Rule("FED101", "use-after-donate", "ast",
+         "a buffer passed to a donate_argnums jit is read again before "
+         "reassignment (donated storage is invalid after the call)"),
+    Rule("FED102", "host-nondeterminism", "ast",
+         "np.random/time/random inside traced code — baked in at trace "
+         "time, breaks scan==loop==resume (the PR 7 timing fictions)"),
+    Rule("FED103", "scan-side-effect", "ast",
+         "Python side effect inside a lax.scan/loop body — runs once at "
+         "trace time, not per round"),
+    Rule("FED104", "kernel-side-effect", "ast",
+         "Python side effect inside a pallas_call kernel body"),
+    Rule("FED105", "bare-except", "ast",
+         "'except:' catches KeyboardInterrupt/SystemExit"),
+    Rule("FED106", "swallowed-exception", "ast",
+         "except body that is only 'pass' in checkpoint/prefetcher "
+         "paths — failures there must surface"),
+    Rule("FED201", "donation-aliasing", "jaxpr",
+         "the donated round carry must actually alias in the lowering "
+         "(tf.aliasing_output per params leaf)"),
+    Rule("FED202", "effectful-scan-primitive", "jaxpr",
+         "no callback/infeed/outfeed primitives or JAX effects inside "
+         "the fused round scan body"),
+    Rule("FED203", "carry-stability", "jaxpr",
+         "round_step must map the state pytree onto its own structure/"
+         "shapes/dtypes (what scan and resume require)"),
+    Rule("FED204", "kernel-oracle-parity", "jaxpr",
+         "every Pallas kernel entry needs a ref.*_math/_ref oracle with "
+         "an identical positional signature (the PR 4/9 contract)"),
+]}
+
+__all__ = ["RULES", "Rule", "Finding", "findings_json", "summarize",
+           "write_json", "run_paths", "run_traces"]
+
+
+def run_paths(paths, select=None) -> list[Finding]:
+    """Layer 1 over ``paths`` (files or directories), suppressions
+    applied, findings sorted by location."""
+    import os
+
+    from repro.analysis.ast_rules import run_file
+    files = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for root, dirs, names in os.walk(p):
+            dirs[:] = [d for d in dirs
+                       if d != "__pycache__" and not d.startswith(".")]
+            files.extend(os.path.join(root, n) for n in sorted(names)
+                         if n.endswith(".py"))
+    findings = []
+    for f in sorted(set(files)):
+        with open(f, encoding="utf-8") as fh:
+            src = fh.read()
+        findings.extend(run_file(os.path.relpath(f), src, select))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings
+
+
+def run_traces(select=None) -> list[Finding]:
+    """Layer 2 over the real registries (see ``jaxpr_rules``)."""
+    from repro.analysis import jaxpr_rules
+    return jaxpr_rules.run(select)

@@ -1,0 +1,81 @@
+"""CLI front of fedlint: ``python -m repro.analysis``.
+
+With no paths it analyzes the repo's default surface (``src``,
+``benchmarks``, ``scripts`` under the cwd) AND runs the layer-2 trace
+rules; with explicit paths it runs the AST layer on just those (add
+``--select FED201,...`` to force trace rules too). ``--json`` prints
+the uniform gate-artifact schema (``repro.analysis.findings``) to
+stdout; ``--out FILE`` writes it alongside the human report — CI uses
+``--out`` so the findings JSON is uploaded even on a green run.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis import RULES, findings_json, run_paths, run_traces
+from repro.analysis.findings import summarize, write_json
+
+DEFAULT_PATHS = ("src", "benchmarks", "scripts")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="fedlint: jaxpr- and AST-level invariant analyzer")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs for the AST layer (default: "
+                         "src benchmarks scripts + trace rules)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the findings JSON to stdout")
+    ap.add_argument("--out", default=None,
+                    help="also write the findings JSON to this path")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids to run (default all)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in RULES.values():
+            print(f"{r.id}  [{r.layer:5s}] {r.name}: {r.doc}")
+        return 0
+
+    select = None
+    if args.select:
+        select = {s.strip() for s in args.select.split(",") if s.strip()}
+        unknown = select - set(RULES)
+        if unknown:
+            print(f"unknown rules: {sorted(unknown)}; known: "
+                  f"{sorted(RULES)}", file=sys.stderr)
+            return 2
+
+    explicit = bool(args.paths)
+    paths = args.paths or [p for p in DEFAULT_PATHS if os.path.isdir(p)]
+    findings = run_paths(paths, select)
+    run_layer2 = (not explicit) or (
+        select is not None and any(RULES[r].layer == "jaxpr"
+                                   for r in select))
+    if run_layer2:
+        findings.extend(run_traces(select))
+
+    summ = summarize(findings)
+    if args.out:
+        write_json(args.out, "fedlint", findings)
+    if args.json:
+        import json
+        json.dump(findings_json("fedlint", findings), sys.stdout, indent=2)
+        print()
+    else:
+        for f in findings:
+            print(f.render())
+        print(f"fedlint: {summ['total']} findings "
+              f"({summ['suppressed']} suppressed, "
+              f"{summ['unsuppressed']} unsuppressed) over "
+              f"{len(paths)} path(s)"
+              + ("" if run_layer2 else " [AST layer only]"))
+    return 1 if summ["unsuppressed"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,505 @@
+"""Layer 1: AST invariant rules over host-side Python.
+
+Each rule encodes an invariant this repo has actually shipped a fix for
+(see README "Static analysis & invariants"):
+
+  FED101 use-after-donate        a buffer passed to a ``donate_argnums``
+                                 jit is read again before reassignment —
+                                 donated storage is invalid after the
+                                 call (the engine/serving planes donate
+                                 the round carry and the KV pool)
+  FED102 host-nondeterminism     ``np.random.*`` / ``time.*`` clocks /
+                                 stdlib ``random`` inside traced code —
+                                 baked in as a trace-time constant, it
+                                 silently breaks scan==loop==resume
+                                 bit-identity (the PR 7 timing fictions)
+  FED103 scan-side-effect        Python side effects (print/IO/logging/
+                                 closure mutation) in a ``lax.scan`` /
+                                 ``fori/while/cond`` body — they run
+                                 once at trace time, not per round
+  FED104 kernel-side-effect      same, inside a ``pallas_call`` kernel
+  FED105 bare-except             ``except:`` catches KeyboardInterrupt/
+                                 SystemExit and hides real failures
+  FED106 swallowed-exception     an except body that is only ``pass`` in
+                                 checkpoint/prefetcher paths — a
+                                 half-written checkpoint or a dead
+                                 staging thread must surface, not vanish
+
+Heuristics are intentionally conservative (a finding should be worth a
+human's time): tracing contexts are functions syntactically passed to /
+decorated with jit/vmap/grad/scan/pallas_call (nested defs inherit),
+and use-after-donate is a straight-line, same-block analysis.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+
+# call targets whose function-valued arguments are traced
+_TRACERS = {"jit", "vmap", "pmap", "grad", "value_and_grad", "checkpoint",
+            "remat", "eval_shape", "make_jaxpr", "scan", "fori_loop",
+            "while_loop", "cond", "switch", "pallas_call", "custom_vjp",
+            "custom_jvp"}
+_LOOP_BODY = {"scan", "fori_loop", "while_loop", "cond", "switch"}
+
+# the legitimate host plane: numpy RNG / clocks ARE the contract here
+# (counter-based schedule hashes, perf timers closed by block_until_ready)
+_FED102_ALLOW = ("repro/env/", "repro/obs/", "env/base.py")
+
+# FED106 scope: checkpoint writers and the staging prefetcher
+_FED106_PATHS = ("checkpoint", "pipeline")
+
+_NONDET_PREFIXES = ("np.random.", "numpy.random.", "random.",
+                    "secrets.", "uuid.")
+_NONDET_EXACT = {"time.time", "time.perf_counter", "time.monotonic",
+                 "time.time_ns", "datetime.now", "datetime.datetime.now",
+                 "datetime.utcnow"}
+_EFFECT_PREFIXES = ("logging.", "os.", "sys.", "shutil.", "json.dump",
+                    "np.save", "numpy.save", "pickle.")
+_EFFECT_BARE = {"print", "open", "input", "breakpoint"}
+_MUTATORS = {"append", "extend", "insert", "update", "add", "put",
+             "write", "writelines", "setdefault", "remove", "clear"}
+
+
+def _walk_shallow(node):
+    """ast.walk that does not descend into nested function definitions
+    (straight-line analyses must not attribute a closure's statements to
+    the enclosing block)."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+def _roots(ma, contexts: set) -> set:
+    """Outermost members of a context set (nested defs are covered by
+    walking their root once)."""
+    return {c for c in contexts
+            if ma._enclosing_function(c) not in contexts}
+
+
+def dotted(node: ast.AST) -> str | None:
+    """'a.b.c' for a pure Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _last(dot: str | None) -> str | None:
+    return dot.rsplit(".", 1)[-1] if dot else None
+
+
+class ModuleAnalysis:
+    """One parse of one file, shared by every AST rule."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.parent: dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parent[child] = node
+        self._funcdefs = [n for n in ast.walk(self.tree)
+                          if isinstance(n, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef))]
+        self.scan_bodies = set()
+        self.pallas_kernels = set()
+        self.traced = set()
+        self._collect_contexts()
+
+    # ---------------------------------------------------- scope helpers --
+    def _enclosing_function(self, node: ast.AST):
+        cur = self.parent.get(node)
+        while cur is not None and not isinstance(
+                cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            cur = self.parent.get(cur)
+        return cur
+
+    def _resolve_func_arg(self, arg: ast.AST, at: ast.AST):
+        """The FunctionDef/Lambda a callable-valued argument refers to
+        (unwrapping functools.partial), or None."""
+        if isinstance(arg, ast.Lambda):
+            return arg
+        if isinstance(arg, ast.Call) and _last(dotted(arg.func)) == "partial":
+            return (self._resolve_func_arg(arg.args[0], at)
+                    if arg.args else None)
+        name = dotted(arg)
+        if name is None or "." in name:
+            return None
+        # nearest def with that name: same enclosing function first,
+        # then any scope outward (module-level kernels referenced from
+        # inside wrappers resolve here)
+        encl = self._enclosing_function(at)
+        cands = [f for f in self._funcdefs if f.name == name]
+        for f in cands:
+            if self._enclosing_function(f) is encl:
+                return f
+        return cands[0] if cands else None
+
+    def _mark(self, root, bucket: set):
+        bucket.add(root)
+        self.traced.add(root)
+        for sub in ast.walk(root):
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)) and sub is not root:
+                bucket.add(sub)
+                self.traced.add(sub)
+
+    def _collect_contexts(self):
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                last = _last(dotted(node.func))
+                if last not in _TRACERS:
+                    continue
+                for arg in node.args:
+                    fn = self._resolve_func_arg(arg, node)
+                    if fn is None:
+                        continue
+                    if last == "pallas_call":
+                        self._mark(fn, self.pallas_kernels)
+                    elif last in _LOOP_BODY:
+                        self._mark(fn, self.scan_bodies)
+                    else:
+                        self._mark(fn, self.traced)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if self._is_jit_decorator(dec):
+                        self._mark(node, self.traced)
+
+    @staticmethod
+    def _is_jit_decorator(dec: ast.AST) -> bool:
+        if _last(dotted(dec)) == "jit":
+            return True
+        if isinstance(dec, ast.Call):
+            if _last(dotted(dec.func)) == "jit":
+                return True
+            # functools.partial(jax.jit, static_argnames=...)
+            if (_last(dotted(dec.func)) == "partial" and dec.args
+                    and _last(dotted(dec.args[0])) == "jit"):
+                return True
+        return False
+
+    def _locals_of(self, fn) -> set:
+        """Names bound inside ``fn`` (args + any store), nested included
+        — conservative: a mutation only fires when the base name cannot
+        be local."""
+        out = set()
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.Lambda)):
+            a = fn.args
+            for arg in (a.posonlyargs + a.args + a.kwonlyargs):
+                out.add(arg.arg)
+            if a.vararg:
+                out.add(a.vararg.arg)
+            if a.kwarg:
+                out.add(a.kwarg.arg)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Name) and isinstance(
+                    node.ctx, (ast.Store, ast.Del)):
+                out.add(node.id)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.add(node.name)
+        return out
+
+
+# ------------------------------------------------------------------ rules --
+
+def fed101_use_after_donate(ma: ModuleAnalysis) -> list[Finding]:
+    """Donated buffers read after the donating call (same block)."""
+    findings = []
+    donors = _donating_callables(ma)
+    if not donors:
+        return findings
+    for fn in ma._funcdefs:
+        _scan_block_for_donation(ma, fn.body, donors, findings)
+    _scan_block_for_donation(ma, ma.tree.body, donors, findings)
+    return findings
+
+
+def _donating_callables(ma: ModuleAnalysis) -> dict[str, tuple]:
+    """dotted callable name -> (donated positional indices, donated arg
+    names) for every ``X = jax.jit(..., donate_argnums=...)`` binding."""
+    donors = {}
+    for node in ast.walk(ma.tree):
+        if not (isinstance(node, ast.Assign) and isinstance(node.value,
+                                                            ast.Call)):
+            continue
+        call = node.value
+        if _last(dotted(call.func)) != "jit":
+            continue
+        idxs, names = _donation_spec(call)
+        if not idxs and not names:
+            continue
+        for tgt in node.targets:
+            name = dotted(tgt)
+            if name:
+                donors[name] = (idxs, names)
+    return donors
+
+
+def _donation_spec(call: ast.Call) -> tuple[set, set]:
+    idxs, names = set(), set()
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            idxs |= set(_const_ints(kw.value))
+        elif kw.arg == "donate_argnames":
+            names |= set(_const_strs(kw.value))
+    return idxs, names
+
+
+def _const_ints(node) -> list[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)]
+    return []
+
+
+def _const_strs(node) -> list[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+def _assigned_names(stmt) -> set:
+    """Dotted names (re)bound by a statement — its call's own Assign
+    targets count, so ``logits, kv.pool = self._pf(..., kv.pool, ...)``
+    is the SAFE donation idiom."""
+    out = set()
+    if isinstance(stmt, ast.Assign):
+        tgts = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        tgts = [stmt.target]
+    elif isinstance(stmt, ast.For):
+        tgts = [stmt.target]
+    else:
+        return out
+    for t in tgts:
+        for el in ast.walk(t):
+            d = dotted(el)
+            if d:
+                out.add(d)
+    return out
+
+
+def _scan_block_for_donation(ma, body: list, donors: dict,
+                             findings: list) -> None:
+    """Linear pass over one statement list; recurses into nested blocks
+    with the same straight-line discipline. Only SIMPLE statements are
+    donation sites here: a call buried in a while/if/def is analyzed in
+    its own block, where the in-statement reassignment idiom
+    (``logits, cache = pf(..., cache)``) is visible."""
+    for i, stmt in enumerate(body):
+        calls = ([] if getattr(stmt, "body", None) else
+                 [n for n in _walk_shallow(stmt) if isinstance(n, ast.Call)])
+        for call in calls:
+            spec = donors.get(dotted(call.func) or "")
+            if spec is None:
+                continue
+            donated = []
+            idxs, names = spec
+            for j, arg in enumerate(call.args):
+                d = dotted(arg)
+                if d and j in idxs:
+                    donated.append(d)
+            for kw in call.keywords:
+                d = dotted(kw.value)
+                if d and kw.arg in names:
+                    donated.append(d)
+            if not donated:
+                continue
+            live = set(donated) - _assigned_names(stmt)
+            for later in body[i + 1:]:
+                if not live:
+                    break
+                if isinstance(later, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    continue        # closures run interleaved with rebinds
+                for node in _walk_shallow(later):
+                    d = dotted(node)
+                    if d in live and isinstance(getattr(node, "ctx", None),
+                                                ast.Load):
+                        findings.append(Finding(
+                            rule="FED101", path=ma.path, line=node.lineno,
+                            col=node.col_offset,
+                            message=(f"'{d}' was donated to "
+                                     f"'{dotted(call.func)}' on line "
+                                     f"{call.lineno} and is read again "
+                                     "before reassignment — donated "
+                                     "buffers are invalidated by XLA")))
+                        live.discard(d)
+                live -= _assigned_names(later)
+        # recurse into compound statements (fresh straight-line blocks);
+        # nested defs get their own pass via ma._funcdefs
+        for sub in (getattr(stmt, "body", []), getattr(stmt, "orelse", []),
+                    getattr(stmt, "finalbody", []),
+                    *(h.body for h in getattr(stmt, "handlers", []))):
+            if sub and not isinstance(stmt, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef)):
+                _scan_block_for_donation(ma, sub, donors, findings)
+
+
+def fed102_host_nondeterminism(ma: ModuleAnalysis) -> list[Finding]:
+    if any(allow in ma.path.replace("\\", "/") for allow in _FED102_ALLOW):
+        return []
+    findings = []
+    for ctx in _roots(ma, ma.traced):
+        for node in ast.walk(ctx):
+            if not isinstance(node, ast.Call):
+                continue
+            dot = dotted(node.func)
+            if dot is None:
+                continue
+            hit = (dot in _NONDET_EXACT
+                   or any(dot.startswith(p) for p in _NONDET_PREFIXES))
+            if hit:
+                findings.append(Finding(
+                    rule="FED102", path=ma.path, line=node.lineno,
+                    col=node.col_offset,
+                    message=(f"'{dot}' inside traced code — evaluated "
+                             "once at trace time (a baked-in constant), "
+                             "breaking scan==loop==resume determinism; "
+                             "use jax.random with a threaded key, or "
+                             "stage host-side")))
+    return findings
+
+
+def _enclosing_traced_locals(ma, ctx) -> set:
+    """Names bound by traced functions ENCLOSING ``ctx`` — a fori/scan
+    body nested inside a pallas kernel stores into the kernel's output
+    refs (``y_ref[...] = ...``), which is the kernel's write idiom, not
+    a host side effect."""
+    out = set()
+    cur = ma._enclosing_function(ctx)
+    while cur is not None:
+        if cur in ma.traced:
+            out |= ma._locals_of(cur)
+        cur = ma._enclosing_function(cur)
+    return out
+
+
+def _side_effects_in(ma, contexts: set, rule: str,
+                     where: str) -> list[Finding]:
+    findings = []
+    for ctx in _roots(ma, contexts):
+        local = ma._locals_of(ctx)
+        store_ok = local | _enclosing_traced_locals(ma, ctx)
+        for node in ast.walk(ctx):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                findings.append(Finding(
+                    rule=rule, path=ma.path, line=node.lineno,
+                    col=node.col_offset,
+                    message=f"global/nonlocal rebinding inside {where}"))
+            elif isinstance(node, ast.Call):
+                dot = dotted(node.func)
+                if dot is None:
+                    continue
+                msg = None
+                if dot in _EFFECT_BARE or any(
+                        dot.startswith(p) for p in _EFFECT_PREFIXES):
+                    msg = f"'{dot}' is a host side effect"
+                elif ("." in dot and dot.rsplit(".", 1)[1] in _MUTATORS
+                        and dot.split(".", 1)[0] not in local):
+                    msg = (f"'{dot}' mutates a closure/global object")
+                if msg:
+                    findings.append(Finding(
+                        rule=rule, path=ma.path, line=node.lineno,
+                        col=node.col_offset,
+                        message=(f"{msg} inside {where} — it runs once "
+                                 "at trace time, not per iteration "
+                                 "(use scan ys / io_callback for real "
+                                 "telemetry)")))
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                tgts = (node.targets if isinstance(node, ast.Assign)
+                        else [node.target])
+                for t in tgts:
+                    if isinstance(t, ast.Subscript):
+                        base = dotted(t.value)
+                        if base and base.split(".", 1)[0] not in store_ok:
+                            findings.append(Finding(
+                                rule=rule, path=ma.path, line=node.lineno,
+                                col=node.col_offset,
+                                message=(f"subscript store into closure "
+                                         f"'{base}' inside {where} — a "
+                                         "trace-time mutation, not a "
+                                         "per-iteration effect")))
+    return findings
+
+
+def fed103_scan_side_effect(ma: ModuleAnalysis) -> list[Finding]:
+    return _side_effects_in(ma, ma.scan_bodies, "FED103",
+                            "a lax.scan/loop body")
+
+
+def fed104_kernel_side_effect(ma: ModuleAnalysis) -> list[Finding]:
+    return _side_effects_in(ma, ma.pallas_kernels, "FED104",
+                            "a pallas_call kernel")
+
+
+def fed105_bare_except(ma: ModuleAnalysis) -> list[Finding]:
+    findings = []
+    for node in ast.walk(ma.tree):
+        if isinstance(node, ast.ExceptHandler) and node.type is None:
+            findings.append(Finding(
+                rule="FED105", path=ma.path, line=node.lineno,
+                col=node.col_offset,
+                message=("bare 'except:' catches KeyboardInterrupt/"
+                         "SystemExit — name the exceptions")))
+    return findings
+
+
+def fed106_swallowed_exception(ma: ModuleAnalysis) -> list[Finding]:
+    path = ma.path.replace("\\", "/")
+    if not any(p in path for p in _FED106_PATHS):
+        return []
+    findings = []
+    for node in ast.walk(ma.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        body = [s for s in node.body
+                if not (isinstance(s, ast.Expr)
+                        and isinstance(s.value, ast.Constant))]
+        if all(isinstance(s, (ast.Pass, ast.Continue)) for s in body):
+            findings.append(Finding(
+                rule="FED106", path=ma.path, line=node.lineno,
+                col=node.col_offset,
+                message=("exception swallowed in a checkpoint/prefetcher "
+                         "path — a half-written checkpoint or dead "
+                         "staging thread must surface (re-raise, or "
+                         "propagate through the consumer queue)")))
+    return findings
+
+
+AST_RULES = {
+    "FED101": fed101_use_after_donate,
+    "FED102": fed102_host_nondeterminism,
+    "FED103": fed103_scan_side_effect,
+    "FED104": fed104_kernel_side_effect,
+    "FED105": fed105_bare_except,
+    "FED106": fed106_swallowed_exception,
+}
+
+
+def run_file(path: str, source: str, select=None) -> list[Finding]:
+    """All (selected) AST rules over one file, suppressions applied."""
+    from repro.analysis import suppress
+    ma = ModuleAnalysis(path, source)
+    findings = []
+    for rule_id, rule in AST_RULES.items():
+        if select is None or rule_id in select:
+            findings.extend(rule(ma))
+    return suppress.apply(findings, source, path)

@@ -1,0 +1,72 @@
+"""The one finding schema every repo gate emits.
+
+``Finding`` is fedlint's unit of output, and ``findings_json`` is the
+uniform machine-readable artifact format shared by all three CI gates —
+``python -m repro.analysis --json``, ``scripts/check_metrics.py --json``
+and ``scripts/check_bench.py --json`` — so a workflow consumer parses
+ONE schema regardless of which gate produced the file:
+
+    {"tool": "...", "schema_version": 1,
+     "findings": [{rule, path, line, col, message, severity,
+                   suppressed, justification}, ...],
+     "summary": {"total": n, "suppressed": m, "unsuppressed": k}}
+
+Exit-code convention everywhere: 0 iff ``summary.unsuppressed == 0``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass
+class Finding:
+    """One rule violation at one location.
+
+    ``path`` is repo-relative for AST findings; jaxpr/lowering findings
+    use a ``<trace:config-label>`` pseudo-path (they locate a traced
+    program, not a source line) and ``line`` 0."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+    col: int = 0
+    severity: str = "error"
+    suppressed: bool = False
+    justification: str | None = None
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        tag = (f" [suppressed: {self.justification}]" if self.suppressed
+               else "")
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"{self.message}{tag}")
+
+
+def summarize(findings: list[Finding]) -> dict:
+    sup = sum(1 for f in findings if f.suppressed)
+    return {"total": len(findings), "suppressed": sup,
+            "unsuppressed": len(findings) - sup}
+
+
+def findings_json(tool: str, findings: list[Finding],
+                  extra: dict | None = None) -> dict:
+    """The uniform gate-artifact record (see module docstring)."""
+    rec = {"tool": tool, "schema_version": SCHEMA_VERSION,
+           "findings": [f.to_dict() for f in findings],
+           "summary": summarize(findings)}
+    if extra:
+        rec.update(extra)
+    return rec
+
+
+def write_json(path: str, tool: str, findings: list[Finding],
+               extra: dict | None = None) -> None:
+    with open(path, "w") as fh:
+        json.dump(findings_json(tool, findings, extra), fh, indent=2)
+        fh.write("\n")

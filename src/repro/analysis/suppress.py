@@ -1,0 +1,66 @@
+"""Per-line fedlint suppressions.
+
+Syntax (inline on the flagged line, or on a standalone comment line
+immediately above it)::
+
+    risky_call()   # fedlint: disable=FED102 — staged host-side, pure in t
+    # fedlint: disable=FED103,FED104 — telemetry ys, not a side effect
+    flagged_line()
+
+The justification after the dash is REQUIRED: a justified suppression
+silences the rule; a bare ``# fedlint: disable=FED102`` still silences
+it but emits FED100 (suppression-without-justification) in its place,
+so "why is this OK" can never silently rot out of the code. Rule lists
+are comma-separated; ``all`` matches every rule.
+"""
+from __future__ import annotations
+
+import re
+
+from repro.analysis.findings import Finding
+
+# "# fedlint: disable=FED101,FED102 — why this is fine"
+# separator: em/en dash, or 1-2 ASCII hyphens surrounded by whitespace
+_RE = re.compile(
+    r"#\s*fedlint:\s*disable=([A-Za-z0-9_,\s]+?)"
+    r"(?:\s+(?:[—–]|--?)\s*(\S.*?))?\s*$")
+
+
+def parse(source: str) -> dict[int, dict]:
+    """line number (1-based) -> {"rules": set, "justification": str|None,
+    "standalone": bool} for every suppression comment in ``source``."""
+    out = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _RE.search(line)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        just = m.group(2)
+        standalone = line.split("#", 1)[0].strip() == ""
+        out[i] = {"rules": rules, "justification": just,
+                  "standalone": standalone}
+    return out
+
+
+def apply(findings: list[Finding], source: str, path: str) -> list[Finding]:
+    """Mark suppressed findings in place; append FED100 findings for
+    suppression comments that carry no justification. Returns the
+    (possibly extended) list."""
+    supp = parse(source)
+    # a standalone suppression comment governs the NEXT line
+    by_target: dict[int, dict] = {}
+    for ln, ent in supp.items():
+        by_target[ln + 1 if ent["standalone"] else ln] = ent
+    for f in findings:
+        ent = by_target.get(f.line)
+        if ent and (f.rule in ent["rules"] or "all" in ent["rules"]):
+            f.suppressed = True
+            f.justification = ent["justification"]
+    out = list(findings)
+    for ln, ent in supp.items():
+        if not ent["justification"]:
+            out.append(Finding(
+                rule="FED100", path=path, line=ln,
+                message=("suppression without justification — write "
+                         "'# fedlint: disable=RULE — <why this is OK>'")))
+    return out

@@ -1,7 +1,7 @@
 """Config dataclasses for models, input shapes and federated runs."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 @dataclass(frozen=True)

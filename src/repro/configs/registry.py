@@ -11,7 +11,7 @@ from repro.configs import (llama3_405b, minitron_8b, mistral_large_123b,
                            mixtral_8x22b, paper_cnn, phi3_vision_4b,
                            phi35_moe_42b, qwen15_110b, rwkv6_3b,
                            whisper_medium, zamba2_1b)
-from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, reduced
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
 
 ARCHS: dict[str, ModelConfig] = {
     "rwkv6-3b": rwkv6_3b.CONFIG,

@@ -235,6 +235,7 @@ class ChunkPrefetcher:
                 try:                            # the worker (no leaked
                     self._q.put(item, timeout=0.1)   # thread/chunk buffer)
                     return True
+                # fedlint: disable=FED106 — bounded 0.1s poll; _stop is the exit
                 except queue.Full:
                     continue
             return False

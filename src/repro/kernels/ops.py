@@ -8,7 +8,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
 from repro.kernels.ama_mix import ama_mix_flat
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rwkv6_scan import rwkv6_scan

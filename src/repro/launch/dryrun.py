@@ -14,7 +14,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import SHAPES, FLConfig, ModelConfig, ShapeConfig
 from repro.configs.registry import (ASSIGNED, LONG_CONTEXT_OK, get_arch,

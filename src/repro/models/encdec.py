@@ -11,8 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn
-from repro.models.layers import (cross_entropy_loss, dense, dense_init,
-                                 embedding, embedding_init, mlp, mlp_init,
+from repro.models.layers import (dense, dense_init, embedding,
+                                 embedding_init, mlp, mlp_init,
                                  rmsnorm, rmsnorm_init)
 
 

@@ -9,8 +9,6 @@ Homogeneous blocks are stacked along a leading layer axis and applied with
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -9,8 +9,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import FLConfig
 from repro.core.ama import (alpha_schedule, ama_aggregate, ama_mix,
-                            fedavg_aggregate, normalize_weights,
-                            weighted_client_sum)
+                            fedavg_aggregate, normalize_weights)
 
 
 def tiny_tree(rng, C=None):

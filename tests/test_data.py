@@ -7,7 +7,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.data.partition import (dirichlet_partition, iid_partition,
                                   shard_partition)
-from repro.data.pipeline import ClientDataset, build_clients
+from repro.data.pipeline import build_clients
 from repro.data.synth import make_image_classification, make_lm_tokens
 
 

@@ -8,7 +8,6 @@ checkpoint a bit-identical continuation, and the FL mesh a no-op at
 CPU scale.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

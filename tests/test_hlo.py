@@ -1,0 +1,60 @@
+"""utils.hlo — HLO text post-processing used by the roofline analysis
+and the bytes-on-wire CI gates."""
+import jax
+import jax.numpy as jnp
+
+from repro.utils.hlo import (COLLECTIVE_OPS, _shape_bytes, collective_stats,
+                             count_op)
+
+_HLO = """\
+HloModule jit_step
+  %ag = bf16[512,4]{1,0} all-gather(%p), replica_groups={{0,1}}
+  %ar = f32[128]{0} all-reduce(%x), to_apply=%sum
+  %ars = f32[128]{0} all-reduce-start(%x)
+  %ard = f32[128]{0} all-reduce-done(%ars)
+  %rs = f32[64]{0} reduce-scatter(%x), dimensions={0}
+  %add = f32[128]{0} add(%x, %y)
+  %fus = f32[128]{0} fusion(%x), kind=kLoop
+"""
+
+
+def test_shape_bytes_dtypes_and_dims():
+    assert _shape_bytes("f32[4,8]") == 4 * 8 * 4
+    assert _shape_bytes("bf16[16]{0}") == 16 * 2
+    assert _shape_bytes("s32[]") == 4            # scalar: one element
+    assert _shape_bytes("pred[3]") == 3
+    # tuple shapes sum their components
+    assert _shape_bytes("(f32[2], s32[2])") == 8 + 8
+    # unknown dtype tokens contribute nothing
+    assert _shape_bytes("token[]") == 0
+
+
+def test_collective_stats_counts_and_bytes():
+    st = collective_stats(_HLO)
+    assert st.counts["all-gather"] == 1
+    # -start counts, -done is skipped (no double counting)
+    assert st.counts["all-reduce"] == 2
+    assert st.counts["reduce-scatter"] == 1
+    assert st.bytes_["all-gather"] == 512 * 4 * 2
+    assert st.bytes_["all-reduce"] == 2 * 128 * 4
+    assert st.total_count == 4
+    assert st.total_bytes == 512 * 4 * 2 + 2 * 128 * 4 + 64 * 4
+    assert "all-gather: n=1" in st.summary()
+
+
+def test_collective_stats_ignores_non_collectives():
+    st = collective_stats(_HLO)
+    assert set(st.counts) <= set(COLLECTIVE_OPS)
+    assert collective_stats("").summary() == "none"
+
+
+def test_count_op():
+    assert count_op(_HLO, "fusion") == 1
+    assert count_op(_HLO, "all-reduce") == 1     # exact-name match only
+    assert count_op(_HLO, "missing-op") == 0
+
+
+def test_single_device_lowering_has_no_collectives():
+    txt = jax.jit(lambda x: (x * 2).sum()).lower(
+        jnp.zeros((8, 8))).compile().as_text()
+    assert collective_stats(txt).total_count == 0

@@ -1,6 +1,5 @@
 """Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
 (interpret mode — executes the kernel body on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -8,7 +7,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.ama_mix import ama_mix_flat
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.ops import ama_mix_pairwise, ama_mix_tree
+from repro.kernels.ops import ama_mix_tree
 from repro.kernels.rwkv6_scan import rwkv6_scan
 
 

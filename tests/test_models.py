@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import SHAPES, reduced
+from repro.configs.base import reduced
 from repro.configs.registry import ARCHS, ASSIGNED, serving_config
 from repro.models.api import build_model
 

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import FLConfig, reduced
+from repro.configs.base import FLConfig
 from repro.configs.registry import ARCHS
 from repro.core import async_ama as aa
 from repro.core import strategies
